@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any
+
+ROOT = Path(__file__).resolve().parents[1]
+ARTIFACTS = ROOT / "artifacts"
+BENCH_OUT = ARTIFACTS / "bench"
+
+
+def save_record(name: str, rec: dict[str, Any]) -> Path:
+    BENCH_OUT.mkdir(parents=True, exist_ok=True)
+    p = BENCH_OUT / f"{name}.json"
+    p.write_text(json.dumps(rec, indent=1))
+    return p
+
+
+def load_record(name: str) -> dict[str, Any] | None:
+    p = BENCH_OUT / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.time() - self.t0
+
+
+def print_table(headers: list[str], rows: list[list], title: str = "") -> None:
+    if title:
+        print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    line = "  ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))

@@ -1,0 +1,104 @@
+"""Paper Fig. 1 + §V-C: data-heterogeneity quantification.
+
+Sweeps the Dirichlet concentration alpha, measures for each fleet
+  * mean label-ratio |L_i|/|L_g|,
+  * mean 1-D Wasserstein distance W_i,
+  * the fitted non-i.i.d. degree eta (Eq. 2),
+and trains FedAvg briefly to get the accuracy trend. Reproduces the
+paper's claims that (a) eta tracks the accuracy trend while WD and
+label-ratio alone leave gaps, and (b) the least-squares fit of Eq. 2 to
+accuracy is strongly linear (paper: R^2 = 0.97 MNIST / 0.895 CIFAR10).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, save_record
+from repro.core import noniid
+from repro.data import partition
+from repro.data.synthetic import MNIST_LIKE, CIFAR_LIKE
+from repro.launch.train import run_paper_experiment
+
+ALPHAS_QUICK = [0.01, 0.1, 0.5, 1.0, 10.0, 100.0]
+ALPHAS_FULL = [0.001, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 100.0, 1000.0]
+
+
+def measure_fleet(alpha: float, dataset: str, num_workers: int,
+                  seed: int) -> tuple[float, float]:
+    spec = MNIST_LIKE if dataset == "mnist_like" else CIFAR_LIKE
+    data = partition.dirichlet_partition(
+        jax.random.PRNGKey(seed), num_workers, alpha, spec)
+    ratios, wds = jax.vmap(
+        lambda l: noniid.noniid_features(l, data.global_y, spec.num_classes)
+    )(data.y)
+    return float(ratios.mean()), float(wds.mean())
+
+
+def run(quick: bool = True, dataset: str = "mnist_like",
+        num_workers: int = 0, rounds: int = 0, seed: int = 0) -> dict:
+    alphas = ALPHAS_QUICK if quick else ALPHAS_FULL
+    num_workers = num_workers or (10 if quick else 50)
+    rounds = rounds or (4 if quick else 10)
+    ratios, wds, accs = [], [], []
+    for a in alphas:
+        r, w = measure_fleet(a, dataset, num_workers, seed)
+        rec = _fedavg_at(a, dataset, num_workers, rounds, seed)
+        ratios.append(r)
+        wds.append(w)
+        accs.append(rec["final_acc"])
+
+    ratios_np, wds_np = np.array(ratios), np.array(wds)
+    accs_np = np.array(accs)
+    coeffs, r2_train, r2_test = noniid.fit_eta_coefficients(
+        ratios_np, wds_np, accs_np)
+    eta = noniid.minmax_normalize(jnp.asarray(
+        coeffs.beta1 * ratios_np + coeffs.beta2 * wds_np + coeffs.phi))
+    acc_n = noniid.minmax_normalize(jnp.asarray(accs_np))
+    wd_n = noniid.minmax_normalize(jnp.asarray(wds_np))
+    ratio_n = noniid.minmax_normalize(jnp.asarray(ratios_np))
+
+    # Fig-1 gap statistics: |metric - normalized accuracy| per alpha
+    gap = lambda m: float(jnp.abs(m - acc_n).mean())
+    gaps = {"eta": gap(eta), "one_minus_wd": gap(1 - wd_n),
+            "label_ratio": gap(ratio_n)}
+
+    rows = [[a, f"{r:.3f}", f"{w:.3f}", f"{ac:.3f}", f"{float(e):.3f}"]
+            for a, r, w, ac, e in zip(alphas, ratios, wds, accs, eta)]
+    print_table(["alpha", "label_ratio", "WD", "fedavg_acc", "eta"],
+                rows, "Fig. 1 — heterogeneity metrics vs FedAvg accuracy")
+    print(f"Eq. 2 fit: beta1={coeffs.beta1:.3f} beta2={coeffs.beta2:.3f} "
+          f"phi={coeffs.phi:.3f}  R2(train)={r2_train:.3f} "
+          f"R2(test)={r2_test:.3f}")
+    print(f"mean |metric - acc| gaps (lower = tracks accuracy better): "
+          f"eta={gaps['eta']:.3f}  1-WD={gaps['one_minus_wd']:.3f}  "
+          f"label-ratio={gaps['label_ratio']:.3f}")
+
+    rec = {"alphas": alphas, "label_ratio": ratios, "wd": wds,
+           "fedavg_acc": accs, "eta": np.asarray(eta).tolist(),
+           "coeffs": list(coeffs), "r2_train": r2_train, "r2_test": r2_test,
+           "gaps": gaps, "dataset": dataset}
+    save_record("fig1_metric", rec)
+    return rec
+
+
+def _fedavg_at(alpha, dataset, num_workers, rounds, seed, n_local=256):
+    """FedAvg on a Dirichlet(alpha) fleet (case machinery bypassed)."""
+    from repro.launch import train as train_mod
+    orig = train_mod.CASES["noniid1"]
+    train_mod.CASES["noniid1"] = (
+        lambda key, C, spec, n: partition.dirichlet_partition(
+            key, C, alpha, spec, n_local=n))
+    try:
+        return run_paper_experiment(
+            algorithm="fedavg", case="noniid1", dataset=dataset,
+            rounds=rounds, num_workers=num_workers, width_mult=2,
+            local_epochs=2, n_local=n_local, lr=0.05, seed=seed,
+            verbose=False)
+    finally:
+        train_mod.CASES["noniid1"] = orig
+
+
+if __name__ == "__main__":
+    run()

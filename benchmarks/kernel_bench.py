@@ -1,0 +1,126 @@
+"""Pallas-kernel microbenchmarks (CPU container: interpret-mode
+correctness + analytic VMEM/roofline accounting; wall-clock here times the
+jnp reference, NOT the kernel — real kernel timing needs a TPU).
+
+For each kernel we report, per shape:
+  * max |kernel - ref| (interpret mode vs the pure-jnp oracle),
+  * the kernel's VMEM working set per grid step (must fit ~16 MiB v5e
+    VMEM given the BlockSpec tiling),
+  * analytic HBM traffic / FLOPs -> the kernel's v5e roofline bound.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, save_record
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, reps=3):
+    out = fn()  # warm-up/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def bench_pso_update() -> list[list]:
+    from repro.kernels.pso_update import pso_update, pso_update_ref
+    from repro.kernels.pso_update.pso_update import BLOCK_ROWS
+    rows = []
+    for n in [1 << 14, 1 << 18, 1 << 21]:
+        ks = jax.random.split(KEY, 5)
+        mk = lambda k: {"a": jax.random.normal(k, (n,))}
+        w, v, wl, wg, d = (mk(k) for k in ks)
+        w2, v2 = pso_update(w, v, wl, wg, d, 0.7, 0.2, -0.4, clip=1.0,
+                            interpret=True)
+        coefs = jnp.array([0.7, 0.2, -0.4, 1.0])
+        wr, vr = pso_update_ref(coefs, w["a"], v["a"], wl["a"], wg["a"],
+                                d["a"])
+        err = max(float(jnp.abs(w2["a"] - wr).max()),
+                  float(jnp.abs(v2["a"] - vr).max()))
+        hbm = 7 * n * 4               # 5 reads + 2 writes, fp32
+        vmem = 7 * BLOCK_ROWS * 128 * 4
+        t_ref = _time(lambda: pso_update_ref(coefs, w["a"], v["a"],
+                                             wl["a"], wg["a"], d["a"]))
+        rows.append(["pso_update", f"n={n}", f"{err:.2e}",
+                     f"{vmem / 2**10:.0f}KiB",
+                     f"{hbm / HBM_BW * 1e6:.1f}us (mem)",
+                     f"{t_ref * 1e3:.2f}ms"])
+    return rows
+
+
+def bench_flash_attention() -> list[list]:
+    from repro.kernels.flash_attention import attention_ref, flash_attention
+    rows = []
+    for (b, s, h, kv, hd, w) in [(1, 256, 4, 2, 64, 0),
+                                 (1, 512, 2, 2, 64, 128)]:
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd))
+        k = jax.random.normal(ks[1], (b, s, kv, hd))
+        v = jax.random.normal(ks[2], (b, s, kv, hd))
+        out = flash_attention(q, k, v, causal=True, window=w,
+                              interpret=True)
+        g = h // kv
+        qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+        kr = jnp.repeat(k.transpose(0, 2, 1, 3), g, 1).reshape(b * h, s, hd)
+        vr = jnp.repeat(v.transpose(0, 2, 1, 3), g, 1).reshape(b * h, s, hd)
+        ref = attention_ref(qr, kr, vr, causal=True, window=w)
+        ref = ref.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+        err = float(jnp.abs(out - ref).max())
+        blk_q = blk_k = 128
+        vmem = (blk_q * hd + 2 * blk_k * hd + blk_q * blk_k + blk_q * hd) * 4
+        frac = 0.5 if w == 0 else min(1.0, w / s)
+        flops = 4 * b * h * s * s * hd * frac
+        t_comp = flops / PEAK_FLOPS_BF16
+        t_ref = _time(lambda: attention_ref(qr, kr, vr, causal=True,
+                                            window=w))
+        rows.append([f"flash_attn{'(swa)' if w else ''}",
+                     f"b{b}s{s}h{h}kv{kv}d{hd}" + (f"w{w}" if w else ""),
+                     f"{err:.2e}", f"{vmem / 2**10:.0f}KiB",
+                     f"{t_comp * 1e6:.2f}us (mxu)",
+                     f"{t_ref * 1e3:.2f}ms"])
+    return rows
+
+
+def bench_rglru() -> list[list]:
+    from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
+    rows = []
+    for (b, s, d) in [(2, 256, 128), (1, 1024, 256)]:
+        ks = jax.random.split(KEY, 3)
+        a = jax.random.uniform(ks[0], (b, s, d), minval=0.5, maxval=0.999)
+        x = 0.1 * jax.random.normal(ks[1], (b, s, d))
+        h0 = jax.random.normal(ks[2], (b, d))
+        out, fin = rglru_scan(h0, a, x, interpret=True)
+        ref = rglru_scan_ref(h0, a, x)
+        err = float(jnp.abs(out - ref).max())
+        hbm = 3 * b * s * d * 4       # read a,b + write h, fp32
+        chunk = 128
+        vmem = 3 * chunk * d * 4
+        t_ref = _time(lambda: rglru_scan_ref(h0, a, x))
+        rows.append(["rglru_scan", f"b{b}s{s}d{d}", f"{err:.2e}",
+                     f"{vmem / 2**10:.0f}KiB",
+                     f"{hbm / HBM_BW * 1e6:.1f}us (mem)",
+                     f"{t_ref * 1e3:.2f}ms"])
+    return rows
+
+
+def run() -> dict:
+    rows = bench_pso_update() + bench_flash_attention() + bench_rglru()
+    print_table(["kernel", "shape", "max|err|", "VMEM/step", "v5e bound",
+                 "CPU ref time"], rows,
+                "Pallas kernels — interpret-mode correctness + roofline")
+    bad = [r for r in rows if float(r[2]) > 1e-3]
+    rec = {"rows": rows, "all_correct": not bad}
+    save_record("kernel_bench", rec)
+    return rec
+
+
+if __name__ == "__main__":
+    run()

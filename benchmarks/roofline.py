@@ -1,0 +1,127 @@
+"""§Roofline deliverable: per (arch x shape) three-term roofline from the
+dry-run artifacts (single-pod 16x16 mesh), per the brief:
+
+    compute term    = true_FLOPs / peak_FLOP/s       (per-device program)
+    memory term     = HBM_bytes  / HBM_bw
+    collective term = collective_bytes / link_bw
+
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs utilization ratio and the
+multi-pod lowering status. Reads artifacts/dryrun/*.json (produced by
+`python -m repro.launch.dryrun --all --mesh both`).
+
+The `mem_fa` column re-derives the memory term assuming the Pallas
+flash-attention kernel (kernels/flash_attention) replaces the reference
+chunked attention on the TPU target: the S_q x S_k score/probability
+matrices then live in VMEM scratch and never touch HBM, so their traffic
+is subtracted analytically. The dry-run compiles the reference path (the
+host backend cannot lower Pallas), so the raw memory term is an upper
+bound for attention-heavy prefill/train shapes.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS, print_table, save_record
+from repro.configs.base import INPUT_SHAPES, get_arch
+from repro.launch.mesh import HBM_BW
+
+DRYRUN = ARTIFACTS / "dryrun"
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+MESH_DATA, MESH_MODEL = 16, 16
+
+
+def _attn_score_bytes(arch: str, shape_name: str) -> float:
+    """Per-device HBM bytes the score/prob matrices cost WITHOUT the
+    flash kernel (write+read of scores and probs, fwd; x2 more for the
+    remat-recomputed fwd + bwd at train)."""
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "decode":
+        return 0.0  # one-token attention reads the cache either way
+    n_attn = sum(cfg.block_pattern[i % len(cfg.block_pattern)]
+                 in ("attn", "swa") for i in range(cfg.num_layers))
+    if not n_attn:
+        return 0.0
+    S = shape.seq_len
+    Sk = min(cfg.window_size, S) if cfg.window_size else S
+    # local batch: train shards batch over data via the worker/batch axis;
+    # serve shards batch over data
+    b_local = max(shape.global_batch // MESH_DATA, 1)
+    heads = cfg.num_heads
+    h_local = heads // MESH_MODEL if heads % MESH_MODEL == 0 else heads
+    passes = 3 if shape.kind == "train" else 1   # fwd + recompute + bwd
+    # scores + probs, written and read once each, f32
+    per_layer = 2 * 2 * b_local * h_local * S * Sk * 4
+    total = n_attn * per_layer * passes
+    if cfg.encoder_layers and shape.kind == "train":
+        total += cfg.encoder_layers * 2 * 2 * b_local * heads * \
+            cfg.encoder_memory_len ** 2 * 4 * passes
+    return float(total)
+
+
+def load(arch: str, shape: str, mesh: str, tag: str = "") -> dict | None:
+    p = DRYRUN / f"{arch}__{shape}__{mesh}{tag}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def run(tag: str = "") -> dict:
+    archs = sorted({p.name.split("__")[0] for p in DRYRUN.glob("*.json")})
+    rows, table = [], {}
+    for arch in archs:
+        for shape in SHAPES:
+            rec = load(arch, shape, "single", tag)
+            if rec is None:
+                continue
+            multi = load(arch, shape, "multi", tag)
+            multi_ok = ("skip" if (multi or {}).get("skipped")
+                        else "ok" if (multi or {}).get("ok") else "MISSING")
+            if rec.get("skipped"):
+                rows.append([arch, shape, "SKIP", "-", "-", "-", "-", "-",
+                             "-", multi_ok])
+                table[f"{arch}/{shape}"] = {"skipped": True,
+                                            "reason": rec.get("reason")}
+                continue
+            if not rec.get("ok"):
+                rows.append([arch, shape, "FAIL", "-", "-", "-", "-", "-",
+                             "-", multi_ok])
+                continue
+            r = rec["roofline"]
+            dom = r["dominant"].replace("_s", "")
+            mem_fa = max(r["memory_s"]
+                         - _attn_score_bytes(arch, shape) / HBM_BW, 0.0)
+            rows.append([
+                arch, shape, fmt_s(r["compute_s"]), fmt_s(r["memory_s"]),
+                fmt_s(mem_fa), fmt_s(r["collective_s"]), dom,
+                f"{r['useful_flops_ratio']:.2f}",
+                fmt_s(r["bound_step_s"]), multi_ok])
+            table[f"{arch}/{shape}"] = {
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "memory_flash_s": mem_fa,
+                "collective_s": r["collective_s"], "dominant": dom,
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "bound_step_s": r["bound_step_s"], "multi_pod": multi_ok,
+                "collective_breakdown": rec["collectives"]["by_kind_bytes"],
+                "memory": rec.get("memory"),
+                "host_f32_inflation_bytes":
+                    rec.get("host_f32_inflation_bytes", 0),
+            }
+    print_table(
+        ["arch", "shape", "t_compute", "t_memory", "mem_fa", "t_coll",
+         "dominant", "useful", "bound", "multi-pod"],
+        rows, f"Roofline (single-pod 16x16, v5e){tag and ' tag=' + tag}")
+    rec = {"table": table, "tag": tag}
+    save_record(f"roofline{tag}", rec)
+    return rec
+
+
+if __name__ == "__main__":
+    run()

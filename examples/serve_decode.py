@@ -1,0 +1,17 @@
+"""Serving example: batched prefill + decode over three architecture
+families — dense (smollm), SSM (xlstm, sub-quadratic: the long_500k
+family), and MoE (qwen3) — using reduced configs that execute on CPU.
+The same launch/serve.py path drives full configs on a real mesh.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+for arch, note in [
+    ("smollm-360m", "dense GQA"),
+    ("xlstm-350m", "mLSTM/sLSTM recurrence -> O(1) decode state"),
+    ("qwen3-moe-30b-a3b", "128-expert MoE, top-8 routing"),
+]:
+    print(f"\n=== {arch} ({note}) ===")
+    rec = serve(arch, batch=2, prompt_len=24, gen_len=8, reduced=True)
+    print(f"  sample tokens: {rec['output_sample']}")

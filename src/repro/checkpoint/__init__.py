@@ -1,0 +1,2 @@
+from repro.checkpoint.npz import (save_pytree, restore_pytree,
+                                  CheckpointManager)

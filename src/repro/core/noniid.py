@@ -1,0 +1,161 @@
+"""Non-i.i.d. degree metric (paper §II, Eq. 2).
+
+Quantifies label-distribution skew of each worker's local dataset against a
+global reference dataset, via
+
+    eta_i = Normalize( beta1 * |L_i|/|L_g|  +  beta2 * W_i  +  phi )
+
+where W_i is the Wasserstein distance between the worker's label
+distribution and the global label distribution (Eq. 1 specialized to the
+discrete label marginal — the paper evaluates label skew, for which the
+1-D discrete WD over the ordered label alphabet is exact), |L_i|/|L_g| is
+the label-ratio (fraction of global label types present locally), and
+Normalize is min-max scaling across the worker population (paper [13]).
+
+The coefficients (beta1, beta2, phi) are fitted by least squares against
+observed distributed-learning accuracy over a Dirichlet-alpha sweep
+(paper §V-C); `fit_eta_coefficients` reproduces that procedure.
+
+Everything here is pure JAX and shape-polymorphic so it can run inside a
+pjit'ed program (the per-worker label histogram is the only cross-worker
+communication the metric ever needs: an all-gather of (L,) vectors).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def label_histogram(labels: Array, num_classes: int) -> Array:
+    """Counts per class. labels: int array, any shape -> (num_classes,) f32."""
+    one_hot = jax.nn.one_hot(labels.reshape(-1), num_classes, dtype=jnp.float32)
+    return one_hot.sum(axis=0)
+
+
+def label_distribution(labels: Array, num_classes: int) -> Array:
+    """Normalized label marginal Pr_D(y); safe for empty datasets."""
+    hist = label_histogram(labels, num_classes)
+    total = hist.sum()
+    return jnp.where(total > 0, hist / jnp.maximum(total, 1.0),
+                     jnp.full_like(hist, 1.0 / num_classes))
+
+
+def wasserstein_1d(p: Array, q: Array) -> Array:
+    """Discrete 1-D Wasserstein-1 distance between label marginals.
+
+    For distributions supported on the ordered alphabet {0..L-1} with unit
+    ground metric |i - j|, W1(p, q) = sum_k |CDF_p(k) - CDF_q(k)|  (exact
+    closed form of Eq. 1 for label marginals).
+    """
+    cdf_p = jnp.cumsum(p)
+    cdf_q = jnp.cumsum(q)
+    return jnp.abs(cdf_p - cdf_q).sum()
+
+
+def label_ratio(local_hist: Array, global_hist: Array) -> Array:
+    """|L_i| / |L_g|: fraction of globally-present label types present locally."""
+    present_local = (local_hist > 0) & (global_hist > 0)
+    present_global = global_hist > 0
+    return present_local.sum().astype(jnp.float32) / jnp.maximum(
+        present_global.sum().astype(jnp.float32), 1.0)
+
+
+def minmax_normalize(x: Array, eps: float = 1e-12) -> Array:
+    """Min-max scaling across the worker population (paper [13])."""
+    lo, hi = x.min(), x.max()
+    return (x - lo) / jnp.maximum(hi - lo, eps)
+
+
+class EtaCoefficients(NamedTuple):
+    """Fitted coefficients of Eq. 2. Paper §V-C reports
+    (0.286, -0.07, 0.592) for CIFAR10 and (-0.031, 0.127, -0.04) for MNIST."""
+    beta1: float
+    beta2: float
+    phi: float
+
+
+# Paper §V-C reference values.
+CIFAR10_COEFFS = EtaCoefficients(beta1=0.286, beta2=-0.07, phi=0.592)
+MNIST_COEFFS = EtaCoefficients(beta1=-0.031, beta2=0.127, phi=-0.04)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def noniid_features(local_labels: Array, global_labels: Array,
+                    num_classes: int) -> tuple[Array, Array]:
+    """Per-worker raw features (label_ratio, W_i) of Eq. 2."""
+    local_hist = label_histogram(local_labels, num_classes)
+    global_hist = label_histogram(global_labels, num_classes)
+    p = label_distribution(local_labels, num_classes)
+    q = label_distribution(global_labels, num_classes)
+    return label_ratio(local_hist, global_hist), wasserstein_1d(p, q)
+
+
+def noniid_degree(ratios: Array, wds: Array,
+                  coeffs: EtaCoefficients = CIFAR10_COEFFS) -> Array:
+    """Eq. 2: eta (the non-i.i.d. DEGREE) over the worker population.
+
+    The beta-coefficients are fitted against observed distributed-learning
+    ACCURACY (paper SS V-C), so the raw affine form is an accuracy proxy:
+    HIGH = iid-like data. The degree is its complement -- the paper's
+    Fig. 1 plots "non-i.i.d. degree 1-eta" as the accuracy-tracking
+    curve, and Eq. 5/6's selection keeps workers with LOW theta = low
+    loss AND low degree (good data). Returning the un-complemented proxy
+    inverts the selection signal (it then prefers the MOST heterogeneous
+    workers -- measurably worse than Multi-DSL, see EXPERIMENTS.md
+    SS Paper-validation).
+    ratios, wds: (C,) -> eta (C,) in [0, 1], 1 = most heterogeneous."""
+    raw = coeffs.beta1 * ratios + coeffs.beta2 * wds + coeffs.phi
+    return 1.0 - minmax_normalize(raw)
+
+
+def noniid_degree_from_labels(per_worker_labels: Array, global_labels: Array,
+                              num_classes: int,
+                              coeffs: EtaCoefficients = CIFAR10_COEFFS) -> Array:
+    """eta for a stacked (C, n_i) int label array + (n_g,) global labels."""
+    ratios, wds = jax.vmap(
+        lambda l: noniid_features(l, global_labels, num_classes))(per_worker_labels)
+    return noniid_degree(ratios, wds, coeffs)
+
+
+def fit_eta_coefficients(ratios: np.ndarray, wds: np.ndarray,
+                         accuracies: np.ndarray,
+                         train_frac: float = 0.9,
+                         seed: int = 0) -> tuple[EtaCoefficients, float, float]:
+    """Least-squares fit of Eq. 2 to observed accuracy (paper §V-C).
+
+    Fits acc ~ beta1 * ratio + beta2 * WD + phi on `train_frac` of the
+    records, returns (coeffs, R^2_train, R^2_test). Uses 90/10 split like
+    the paper ("90% records to fit ... 10% to test").
+    """
+    n = len(accuracies)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_train = max(int(round(train_frac * n)), 2)
+    tr, te = perm[:n_train], perm[n_train:]
+
+    def design(idx):
+        return np.stack([ratios[idx], wds[idx], np.ones(len(idx))], axis=1)
+
+    X, y = design(tr), accuracies[tr]
+    sol, *_ = np.linalg.lstsq(X, y, rcond=None)
+    coeffs = EtaCoefficients(beta1=float(sol[0]), beta2=float(sol[1]),
+                             phi=float(sol[2]))
+
+    def r2(idx):
+        if len(idx) == 0:
+            return float("nan")
+        pred = design(idx) @ sol
+        resid = accuracies[idx] - pred
+        tot = accuracies[idx] - accuracies[idx].mean()
+        denom = float((tot ** 2).sum())
+        if denom == 0.0:
+            return 1.0 if float((resid ** 2).sum()) < 1e-12 else 0.0
+        return 1.0 - float((resid ** 2).sum()) / denom
+
+    return coeffs, r2(tr), r2(te)

@@ -1,0 +1,135 @@
+"""PSO-hybrid local update of M-DSL (paper §III-B/C, Eqs. 8-10).
+
+Each worker i maintains, besides its parameters w_i, a velocity v_i, its
+best-so-far parameters w_i^l (Eq. 9) and a view of the global best w^g
+(Eq. 10). One local update step is (Eq. 8, vector form — see DESIGN.md
+§1 for why the vector form is the faithful reading):
+
+    v_{i,t+1} = c0 * v_{i,t}
+              + c1 * (w_i^l - w_{i,t})
+              + c2 * (w^g  - w_{i,t})
+              - lr * grad F(w_{i,t}, D_i)
+    w_{i,t+1} = w_{i,t} + v_{i,t+1}
+
+with c0 ~ U(0,1), c1, c2 ~ N(0,1) re-sampled each communication round
+(paper §V-A). All state lives in parameter-pytree space, so the update is
+model-agnostic; the fused Pallas kernel in `repro.kernels.pso_update`
+implements the same arithmetic for the flat hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class PsoCoefficients(NamedTuple):
+    c0: Array  # inertia,   U(0,1)
+    c1: Array  # cognitive, N(0,1)
+    c2: Array  # social,    N(0,1)
+
+
+class PsoHyperParams(NamedTuple):
+    learning_rate: float = 0.01
+    lr_decay: float = 0.5          # attenuation gamma (paper §V-A)
+    lr_decay_every: int = 10       # rounds between decays
+    velocity_clip: float = 0.0     # 0 = faithful paper (no clip); >0 clips |v|
+
+
+class WorkerState(NamedTuple):
+    """Per-worker swarm state. Every leaf mirrors the param pytree except
+    the scalar losses."""
+    params: PyTree
+    velocity: PyTree
+    best_params: PyTree     # w_i^l  (Eq. 9)
+    best_loss: Array        # F at w_i^l
+    prev_loss: Array        # F_{i,t-1}, for the Eq. 9 indicator
+
+
+class GlobalBest(NamedTuple):
+    """Shared global-best view (Eq. 10)."""
+    params: PyTree          # w^g-bar
+    loss: Array             # F at w^g-bar
+    prev_loss: Array        # F_{t-1}, for the Eq. 10 indicator
+
+
+def sample_coefficients(key: Array) -> PsoCoefficients:
+    """c0 ~ U(0,1); c1, c2 ~ N(0,1) (paper §V-A)."""
+    k0, k1, k2 = jax.random.split(key, 3)
+    return PsoCoefficients(
+        c0=jax.random.uniform(k0, ()),
+        c1=jax.random.normal(k1, ()),
+        c2=jax.random.normal(k2, ()),
+    )
+
+
+def init_worker_state(params: PyTree) -> WorkerState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    inf = jnp.asarray(jnp.inf, jnp.float32)
+    return WorkerState(params=params, velocity=zeros, best_params=params,
+                       best_loss=inf, prev_loss=inf)
+
+
+def init_global_best(params: PyTree) -> GlobalBest:
+    inf = jnp.asarray(jnp.inf, jnp.float32)
+    return GlobalBest(params=params, loss=inf, prev_loss=inf)
+
+
+def _select_tree(take_new: Array, new: PyTree, old: PyTree) -> PyTree:
+    return jax.tree.map(lambda n, o: jnp.where(take_new, n, o), new, old)
+
+
+def update_local_best(state: WorkerState, loss: Array) -> WorkerState:
+    """Eq. 9: w_i^l <- argmin_{w in {w^l, w_i,t}} F."""
+    improved = loss < state.best_loss
+    return state._replace(
+        best_params=_select_tree(improved, state.params, state.best_params),
+        best_loss=jnp.where(improved, loss, state.best_loss),
+        prev_loss=loss,
+    )
+
+
+def update_global_best(gbest: GlobalBest, params: PyTree,
+                       loss: Array) -> GlobalBest:
+    """Eq. 10: w^g <- argmin_{w in {w^g, w_t}} F."""
+    improved = loss < gbest.loss
+    return GlobalBest(
+        params=_select_tree(improved, params, gbest.params),
+        loss=jnp.where(improved, loss, gbest.loss),
+        prev_loss=loss,
+    )
+
+
+def pso_step(state: WorkerState, gbest_params: PyTree, grads: PyTree,
+             coeffs: PsoCoefficients, lr: Array,
+             hp: PsoHyperParams = PsoHyperParams()) -> WorkerState:
+    """One Eq.-8 update. Returns state with new params & velocity."""
+
+    def leaf(w, v, wl, wg, g):
+        v_new = (coeffs.c0 * v + coeffs.c1 * (wl - w) + coeffs.c2 * (wg - w)
+                 - lr * g)
+        if hp.velocity_clip > 0.0:
+            v_new = jnp.clip(v_new, -hp.velocity_clip, hp.velocity_clip)
+        return v_new.astype(w.dtype)
+
+    v_next = jax.tree.map(leaf, state.params, state.velocity,
+                          state.best_params, gbest_params, grads)
+    w_next = jax.tree.map(jnp.add, state.params, v_next)
+    return state._replace(params=w_next, velocity=v_next)
+
+
+def sgd_step(params: PyTree, grads: PyTree, lr: Array) -> PyTree:
+    """Plain SGD step (FedAvg baseline local update). Preserves each
+    leaf's dtype (bf16 swarm state on the mesh)."""
+    return jax.tree.map(lambda w, g: (w - lr * g).astype(w.dtype),
+                        params, grads)
+
+
+def decayed_lr(hp: PsoHyperParams, round_idx: Array) -> Array:
+    """Attenuated learning rate alpha_init * gamma^(t // k) (paper §V-A)."""
+    exponent = jnp.asarray(round_idx // hp.lr_decay_every, jnp.float32)
+    return hp.learning_rate * (hp.lr_decay ** exponent)

@@ -1,0 +1,80 @@
+"""Multi-worker selection mechanism (paper §III-C, Eqs. 4-7).
+
+Per round t every worker computes the trade-off score (Eq. 5)
+
+    theta_{i,t} = tau * F_{i,t} + (1 - tau) * eta_i
+
+and the PS selects every worker satisfying (Eq. 6)
+
+    theta_{i,t} <= mean_j theta_{j,t-1}
+
+(the adaptive threshold is the previous round's population mean). The
+objective (Eq. 4) is to maximize participation, so selection is not
+top-k: *all* workers beating the threshold participate. The global model
+advances by the mean parameter delta of the selected workers (Eq. 7):
+
+    w_{t+1} = w_t + (1/|S|) * sum_{i in S} (w_{i,t+1} - w_{i,t})
+
+If no worker beats the threshold (possible early or after a loss spike),
+we fall back to selecting the single best-theta worker so the round is
+never wasted — this matches vanilla DSL's single-best behavior as the
+degenerate case and keeps Eq. 7 well-defined (|S| >= 1).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class SelectionState(NamedTuple):
+    """Carries the adaptive threshold between rounds."""
+    prev_theta_mean: Array  # mean_j theta_{j,t-1}; +inf on round 0 (all selected)
+
+
+def init_selection_state() -> SelectionState:
+    return SelectionState(prev_theta_mean=jnp.asarray(jnp.inf, jnp.float32))
+
+
+def tradeoff_scores(losses: Array, eta: Array, tau: float = 0.9) -> Array:
+    """Eq. 5. losses: (C,) F_{i,t} on the shared eval set; eta: (C,)."""
+    return tau * losses + (1.0 - tau) * eta
+
+
+def select_workers(theta: Array, sel_state: SelectionState
+                   ) -> tuple[Array, SelectionState]:
+    """Eq. 6 with the >=1 fallback. Returns (mask (C,) f32, next state)."""
+    mask = (theta <= sel_state.prev_theta_mean).astype(jnp.float32)
+    # Fallback: if nobody qualifies, take the single best-theta worker.
+    best = jax.nn.one_hot(jnp.argmin(theta), theta.shape[0],
+                          dtype=jnp.float32)
+    mask = jnp.where(mask.sum() > 0, mask, best)
+    return mask, SelectionState(prev_theta_mean=theta.mean())
+
+
+def aggregate_global(global_params: PyTree, worker_params: PyTree,
+                     prev_worker_params: PyTree, mask: Array) -> PyTree:
+    """Eq. 7: masked mean of per-worker deltas, applied to the global model.
+
+    worker_params / prev_worker_params: pytrees whose leaves carry a
+    leading worker dim C; mask: (C,). Lowers to one all-reduce when the
+    worker dim is mesh-sharded.
+    """
+    denom = jnp.maximum(mask.sum(), 1.0)
+
+    def leaf(g, w, w_prev):
+        delta = w - w_prev
+        m = mask.reshape((-1,) + (1,) * (delta.ndim - 1))
+        return (g + (m * delta).sum(axis=0) / denom).astype(g.dtype)
+
+    return jax.tree.map(leaf, global_params, worker_params,
+                        prev_worker_params)
+
+
+def uploaded_parameter_count(mask: Array, n_params: int) -> Array:
+    """Comm cost of the round: n * sum_i s_{i,t} (paper §IV-C)."""
+    return mask.sum() * n_params

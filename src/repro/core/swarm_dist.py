@@ -1,0 +1,270 @@
+"""M-DSL as a mesh-distributed train step (production integration).
+
+The paper's C edge workers map onto the mesh as data-parallel groups
+(DESIGN.md §3): the swarm state carries a leading *spatial worker* dim W
+sharded over `worker_axes`; each worker's replica is sharded over the
+remaining axes (TP over "model", FSDP over "data" in fsdp mode). One
+jitted `train_step` is one communication round:
+
+    1. every worker takes `local_steps` SGD steps on its micro-batch
+    2. Eq. 8 PSO displacement (inertia + cognitive + social + SGD delta)
+    3. every worker scores F_{i,t} on the shared eval batch (D_g)
+    4. Eq. 5/6 selection against the previous round's mean score
+    5. Eq. 7 masked delta-mean into the global model
+       -> ONE all-reduce over worker_axes (the FedAvg collective with a
+          Boolean weight; the paper's comm saving shows up as masked
+          payload in the wire-protocol driver, launch/train.py)
+    6. Eq. 9/10 local/global best refresh
+
+vmap over the worker dim uses `spmd_axis_name=worker_axes` so internal
+sharding constraints stay consistent with the worker sharding. With
+W == 1 (fsdp mode: the time-multiplexed swarm) the vmap is skipped and
+`temporal_workers` rounds can be scanned by the caller.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pso, selection
+from repro.core.pso import PsoHyperParams
+
+Array = jax.Array
+PyTree = Any
+
+
+class DistSwarmConfig(NamedTuple):
+    worker_axes: tuple[str, ...]    # () => single spatial worker (fsdp mode)
+    num_spatial: int                # W
+    local_steps: int = 1
+    tau: float = 0.9
+    hp: PsoHyperParams = PsoHyperParams(learning_rate=3e-3,
+                                        velocity_clip=1.0)
+    # grad-accumulation chunks per local step: caps per-device activation
+    # memory at batch/microbatches (EXPERIMENTS.md §Perf iteration 2)
+    microbatches: int = 1
+
+
+class DistSwarmState(NamedTuple):
+    """All worker leaves stacked over W; global leaves unstacked."""
+    params: PyTree            # (W, ...) worker models
+    velocity: PyTree          # (W, ...)
+    best_params: PyTree       # (W, ...) w^l (Eq. 9)
+    best_loss: Array          # (W,)
+    global_params: PyTree     # w_t (replicated over worker axes)
+    gbest_params: PyTree      # w^g-bar (Eq. 10)
+    gbest_loss: Array         # ()
+    prev_theta_mean: Array    # () Eq. 6 threshold
+    eta: Array                # (W,) non-iid degrees
+    round_idx: Array          # ()
+
+
+class RoundInfo(NamedTuple):
+    losses: Array             # (W,) F_{i,t+1} on D_g
+    theta: Array              # (W,)
+    mask: Array               # (W,)
+    global_loss: Array        # ()
+
+
+def init_state(global_params: PyTree, cfg: DistSwarmConfig,
+               eta: Optional[Array] = None) -> DistSwarmState:
+    W = cfg.num_spatial
+    stack = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (W,) + x.shape), t)
+    zeros = jax.tree.map(jnp.zeros_like, global_params)
+    return DistSwarmState(
+        params=stack(global_params),
+        velocity=stack(zeros),
+        best_params=stack(global_params),
+        best_loss=jnp.full((W,), jnp.inf, jnp.float32),
+        global_params=global_params,
+        gbest_params=global_params,
+        gbest_loss=jnp.asarray(jnp.inf, jnp.float32),
+        prev_theta_mean=jnp.asarray(jnp.inf, jnp.float32),
+        eta=jnp.zeros((W,), jnp.float32) if eta is None else eta,
+        round_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def _spmd_axis_name(cfg: DistSwarmConfig):
+    """vmap spmd_axis_name for the worker dim: None when the worker dim is
+    not mesh-sharded (pure-CPU tests / temporal-only swarm with W>1)."""
+    if len(cfg.worker_axes) == 0:
+        return None
+    if len(cfg.worker_axes) == 1:
+        return cfg.worker_axes[0]
+    return cfg.worker_axes
+
+
+def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
+                     cfg: DistSwarmConfig
+                     ) -> Callable[..., tuple[DistSwarmState, RoundInfo]]:
+    """loss_fn(params, batch) -> scalar. Returns
+    train_step(state, batch, eval_batch, key) where every leaf of `batch`
+    has a leading worker dim W."""
+
+    W = cfg.num_spatial
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def batch_grad(p, batch):
+        """Gradient of the local batch, optionally accumulated over
+        microbatch chunks (f32 accumulator) to bound activation memory."""
+        k = cfg.microbatches
+        if k <= 1:
+            _, g = grad_fn(p, batch)
+            return g
+        mbs = jax.tree.map(
+            lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+        def acc(g_sum, mb):
+            _, g = grad_fn(p, mb)
+            return jax.tree.map(
+                lambda s, gg: s + gg.astype(jnp.float32), g_sum, g), None
+
+        zeros = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p)
+        g, _ = jax.lax.scan(acc, zeros, mbs)
+        return jax.tree.map(lambda gg, pp: (gg / k).astype(pp.dtype), g, p)
+
+    def local_round(params, velocity, best_params, gbest_params, batch,
+                    coeffs=None, lr=None):
+        """One worker: local SGD steps + Eq. 8 PSO displacement."""
+        w0 = params
+
+        def sgd(p, _):
+            g = batch_grad(p, batch)
+            return pso.sgd_step(p, g, lr), None
+
+        trained, _ = jax.lax.scan(sgd, w0, None, length=cfg.local_steps)
+        sgd_delta = jax.tree.map(lambda a, b: a - b, trained, w0)
+
+        def leaf(w, v, wl, wg, d):
+            v_new = (coeffs.c0 * v + coeffs.c1 * (wl - w)
+                     + coeffs.c2 * (wg - w) + d)
+            if cfg.hp.velocity_clip > 0:
+                v_new = jnp.clip(v_new, -cfg.hp.velocity_clip,
+                                 cfg.hp.velocity_clip)
+            return v_new.astype(w.dtype)
+        v_next = jax.tree.map(leaf, w0, velocity, best_params, gbest_params,
+                              sgd_delta)
+        p_next = jax.tree.map(jnp.add, w0, v_next)
+        return p_next, v_next
+
+    def train_step(state: DistSwarmState, batch: PyTree, eval_batch: PyTree,
+                   key: Array) -> tuple[DistSwarmState, RoundInfo]:
+        # per-worker coefficient draws (see core/mdsl.py)
+        coeffs = jax.vmap(pso.sample_coefficients)(jax.random.split(key, W))
+        lr = pso.decayed_lr(cfg.hp, state.round_idx)
+
+        run_local = functools.partial(local_round, lr=lr)
+        eval_one = lambda p: loss_fn(p, eval_batch)
+        if W == 1:
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            p1, v1 = run_local(sq(state.params), sq(state.velocity),
+                               sq(state.best_params), state.gbest_params,
+                               jax.tree.map(lambda x: x[0], batch),
+                               coeffs=sq(coeffs))
+            ex = lambda t: jax.tree.map(lambda x: x[None], t)
+            new_params, new_vel = ex(p1), ex(v1)
+            losses = eval_one(p1)[None]
+        else:
+            vmapped = jax.vmap(run_local,
+                               in_axes=(0, 0, 0, None, 0, 0),
+                               spmd_axis_name=_spmd_axis_name(cfg))
+            new_params, new_vel = vmapped(state.params, state.velocity,
+                                          state.best_params,
+                                          state.gbest_params, batch, coeffs)
+            losses = jax.vmap(eval_one)(new_params)
+
+        # --- Eqs. 5-6: scores + adaptive-threshold selection -------------
+        theta = selection.tradeoff_scores(losses, state.eta, cfg.tau)
+        mask = (theta <= state.prev_theta_mean).astype(jnp.float32)
+        best = jax.nn.one_hot(jnp.argmin(theta), W, dtype=jnp.float32)
+        mask = jnp.where(mask.sum() > 0, mask, best)
+
+        # --- Eq. 7: masked delta-mean -> all-reduce over worker axes ------
+        global_params = selection.aggregate_global(
+            state.global_params, new_params, state.params, mask)
+        global_loss = eval_one(global_params)
+
+        # --- Eqs. 9-10: bests ---------------------------------------------
+        improved = losses < state.best_loss
+        sel_tree = lambda c, n, o: jax.tree.map(
+            lambda a, b: jnp.where(
+                c.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), n, o)
+        best_params = sel_tree(improved, new_params, state.best_params)
+        best_loss = jnp.where(improved, losses, state.best_loss)
+        g_improved = global_loss < state.gbest_loss
+        gbest_params = jax.tree.map(
+            lambda n, o: jnp.where(g_improved, n, o), global_params,
+            state.gbest_params)
+
+        next_state = DistSwarmState(
+            params=new_params, velocity=new_vel, best_params=best_params,
+            best_loss=best_loss, global_params=global_params,
+            gbest_params=gbest_params,
+            gbest_loss=jnp.minimum(global_loss, state.gbest_loss),
+            prev_theta_mean=theta.mean(), eta=state.eta,
+            round_idx=state.round_idx + 1)
+        return next_state, RoundInfo(losses=losses, theta=theta, mask=mask,
+                                     global_loss=global_loss)
+
+    return train_step
+
+
+def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
+    """Baseline: plain data-parallel FedAvg round (all workers, SGD only).
+    Used for paper-faithful comparisons at mesh scale and as the roofline
+    reference for the selection overhead."""
+    grad_fn = jax.value_and_grad(loss_fn)
+    W = cfg.num_spatial
+
+    def local(params, batch, lr):
+        def sgd(p, _):
+            if cfg.microbatches > 1:
+                k = cfg.microbatches
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+
+                def acc(g_sum, mb):
+                    _, g = grad_fn(p, mb)
+                    return jax.tree.map(
+                        lambda s, gg: s + gg.astype(jnp.float32),
+                        g_sum, g), None
+
+                zeros = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), p)
+                g, _ = jax.lax.scan(acc, zeros, mbs)
+                g = jax.tree.map(lambda gg, pp: (gg / k).astype(pp.dtype),
+                                 g, p)
+            else:
+                _, g = grad_fn(p, batch)
+            return pso.sgd_step(p, g, lr), None
+        trained, _ = jax.lax.scan(sgd, params, None, length=cfg.local_steps)
+        return jax.tree.map(lambda a, b: a - b, trained, params)
+
+    def train_step(state: DistSwarmState, batch, eval_batch, key):
+        lr = pso.decayed_lr(cfg.hp, state.round_idx)
+        if W == 1:
+            delta = local(state.global_params,
+                          jax.tree.map(lambda x: x[0], batch), lr)
+            deltas = jax.tree.map(lambda x: x[None], delta)
+        else:
+            deltas = jax.vmap(
+                lambda b: local(state.global_params, b, lr),
+                spmd_axis_name=_spmd_axis_name(cfg))(batch)
+        global_params = jax.tree.map(
+            lambda g, d: (g + d.mean(axis=0)).astype(g.dtype),
+            state.global_params, deltas)
+        global_loss = loss_fn(global_params, eval_batch)
+        next_state = state._replace(global_params=global_params,
+                                    round_idx=state.round_idx + 1)
+        info = RoundInfo(losses=jnp.zeros((W,)), theta=jnp.zeros((W,)),
+                         mask=jnp.ones((W,)), global_loss=global_loss)
+        return next_state, info
+
+    return train_step

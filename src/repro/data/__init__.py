@@ -1,0 +1,5 @@
+from repro.data.synthetic import (SyntheticImageSpec, MNIST_LIKE, CIFAR_LIKE,
+                                  make_class_prototypes, sample_dataset,
+                                  sample_labels_dirichlet)
+from repro.data.partition import (dirichlet_partition, mixed_dirichlet_partition,
+                                  iid_partition)

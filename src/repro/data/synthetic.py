@@ -1,0 +1,86 @@
+"""Synthetic class-conditional image data (offline stand-in for MNIST/CIFAR10).
+
+MNIST/CIFAR10 are unavailable in this offline container (DESIGN.md §1), so
+we generate datasets with the same interface and cardinalities: each class
+c has a fixed random spatial prototype; a sample is prototype + structured
+noise + per-sample random contrast/shift. The task is learnable (a linear
+probe reaches high accuracy given enough i.i.d. data) yet noisy enough
+that distributed non-i.i.d. training exhibits the degradation the paper
+studies. The synthetic global dataset D_g (GAN-generated in the paper) is
+drawn i.i.d. from the same generator with uniform labels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class SyntheticImageSpec(NamedTuple):
+    name: str
+    height: int
+    width: int
+    channels: int
+    num_classes: int
+    noise_scale: float = 0.8
+    prototype_scale: float = 1.0
+
+
+MNIST_LIKE = SyntheticImageSpec("mnist_like", 28, 28, 1, 10, noise_scale=0.6)
+CIFAR_LIKE = SyntheticImageSpec("cifar_like", 32, 32, 3, 10, noise_scale=1.0)
+
+
+def make_class_prototypes(key: Array, spec: SyntheticImageSpec) -> Array:
+    """(num_classes, H, W, C) fixed random prototypes, low-pass filtered so
+    classes differ in coarse structure (like real image classes)."""
+    raw = jax.random.normal(
+        key, (spec.num_classes, spec.height, spec.width, spec.channels))
+    # cheap 3x3 box blur, twice, to create spatial correlation
+    def blur(x):
+        pad = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)), mode="edge")
+        acc = sum(pad[:, i:i + spec.height, j:j + spec.width, :]
+                  for i in range(3) for j in range(3))
+        return acc / 9.0
+    smooth = blur(blur(raw))
+    # re-standardize per class: the blur shrinks variance ~9x per pass,
+    # which would bury the class signal under the sample noise
+    mean = smooth.mean(axis=(1, 2, 3), keepdims=True)
+    std = smooth.std(axis=(1, 2, 3), keepdims=True)
+    return spec.prototype_scale * (smooth - mean) / (std + 1e-6)
+
+
+def sample_images(key: Array, labels: Array, prototypes: Array,
+                  spec: SyntheticImageSpec) -> Array:
+    """Draw images for given int labels: prototype[label] * contrast + noise."""
+    n = labels.shape[0]
+    k_noise, k_con = jax.random.split(key)
+    base = prototypes[labels]
+    contrast = 1.0 + 0.3 * jax.random.normal(k_con, (n, 1, 1, 1))
+    noise = spec.noise_scale * jax.random.normal(k_noise, base.shape)
+    return base * contrast + noise
+
+
+def sample_labels_dirichlet(key: Array, alpha: float, n: int,
+                            num_classes: int) -> Array:
+    """Labels for one worker: class proportions ~ Dir(alpha), then n draws.
+
+    This is the paper's generation scheme [6]: small alpha => the worker
+    sees only a few classes (high label skew); large alpha => near-uniform.
+    """
+    k_prop, k_draw = jax.random.split(key)
+    props = jax.random.dirichlet(k_prop, alpha * jnp.ones(num_classes))
+    return jax.random.categorical(
+        k_draw, jnp.log(props + 1e-12)[None, :].repeat(n, axis=0))
+
+
+def sample_dataset(key: Array, labels: Array, prototypes: Array,
+                   spec: SyntheticImageSpec) -> tuple[Array, Array]:
+    """(x, y) for given labels."""
+    return sample_images(key, labels, prototypes, spec), labels
+
+
+def uniform_labels(key: Array, n: int, num_classes: int) -> Array:
+    return jax.random.randint(key, (n,), 0, num_classes)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel module trio provides:
+  <name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, layout, GQA plumbing)
+  ref.py    — pure-jnp oracle used by the test sweeps
+
+Kernels: pso_update (the paper's Eq.-8 fused pointwise swarm update),
+flash_attention (blockwise causal/sliding attention), rglru_scan
+(streaming linear-recurrence scan). On this CPU-only container they
+execute via interpret=True (`repro.kernels.runtime.interpret_default`);
+on TPU they compile through Mosaic.
+"""

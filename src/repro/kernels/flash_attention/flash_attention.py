@@ -1,0 +1,132 @@
+"""Blockwise (flash) attention Pallas kernel — causal / sliding-window,
+TPU-native tiling (DESIGN.md §5).
+
+Grid is (batch*heads, num_q_blocks, num_kv_blocks) with the kv dim
+iterating fastest (TPU grids are sequential), so the online-softmax
+running statistics (m, l) and the output accumulator live in VMEM scratch
+across kv steps of one q block:
+
+  * q tile (block_q, head_dim) stays resident in VMEM for the whole kv
+    sweep; k/v stream through in (block_k, head_dim) tiles,
+  * scores/accumulation in fp32 on the MXU (block_q x block_k x head_dim
+    matmuls, all dims 128-multiples),
+  * fully-masked kv blocks are skipped via @pl.when on *block indices*
+    (causal: block entirely above the diagonal; window: block entirely
+    behind the window) — skipped blocks cost no per-element work.
+
+GQA is handled by the ops.py wrapper (kv head replication via reshape of
+the BH dim, not materialization). `q_offset` aligns query absolute
+positions when Sq < Sk (suffix alignment for chunked prefill).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, kv_len: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    # ---- block-level skip decision (indices only) ------------------------
+    q_lo = qi * block_q + q_offset          # absolute position of 1st row
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_k
+    k_hi = k_lo + block_k - 1
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_lo <= q_hi)
+    if window:
+        run = jnp.logical_and(run, k_hi > q_lo - window)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * alpha +
+                        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "kv_len", "block_q",
+                     "block_k", "interpret"))
+def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: int = 0,
+                       q_offset: int = 0, kv_len: int | None = None,
+                       block_q: int = DEFAULT_BLOCK_Q,
+                       block_k: int = DEFAULT_BLOCK_K,
+                       interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, hd), k/v: (BH, Sk, hd); Sq % block_q == Sk % block_k == 0.
+    Returns (BH, Sq, hd). Query row i has absolute position q_offset + i;
+    kv positions are [0, kv_len) (kv_len < Sk masks right-padding)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, Sq // block_q, Sk // block_k)
+
+    q_spec = pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0))
+    kv_spec = pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0))
+    o_spec = pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        kv_len=Sk if kv_len is None else kv_len, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

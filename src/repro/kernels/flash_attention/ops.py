@@ -1,0 +1,51 @@
+"""Public wrapper for the flash-attention kernel: (B, S, H, hd) layout,
+GQA (kv head groups), padding to block multiples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention_bh)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd) with H % K == 0.
+    Suffix-aligned when Sq < Sk (chunked prefill)."""
+    if interpret is None:
+        interpret = runtime.interpret_default()
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    g = H // K
+
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Sk))
+    pq = -Sq % bq
+    pk = -Sk % bk
+    q_offset = Sk - Sq  # suffix alignment
+
+    # (B, S, H, hd) -> (B*H, S, hd); kv heads repeated to match q heads
+    # (XLA fuses the broadcast into the kernel operand stream on TPU).
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(B * H, Sk, hd)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(B * H, Sk, hd)
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
+
+    out = flash_attention_bh(qt, kt, vt, causal=causal, window=window,
+                             q_offset=q_offset, kv_len=Sk, block_q=bq,
+                             block_k=bk, interpret=interpret)
+    out = out[:, :Sq].reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,2 @@
+from repro.kernels.pso_update.ops import pso_update
+from repro.kernels.pso_update.ref import pso_update_ref

@@ -1,0 +1,73 @@
+"""Public wrapper for the fused PSO update kernel: accepts arbitrary
+parameter pytrees, flattens + pads to the kernel's (rows, 128) layout,
+runs one fused pass, and unflattens. This is the production hot path of
+`core/swarm_dist` (per-worker Eq.-8 update over the whole model)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.pso_update.pso_update import BLOCK_ROWS, pso_update_2d
+
+PyTree = Any
+_LANES = 128
+
+
+def _flatten_pad(tree: PyTree) -> tuple[jax.Array, Any, int]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    n = flat.shape[0]
+    chunk = BLOCK_ROWS * _LANES
+    padded = -(-n // chunk) * chunk
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, _LANES), (treedef, [l.shape for l in leaves],
+                                      [l.dtype for l in leaves]), n
+
+
+def _unflatten(flat2d: jax.Array, spec, n: int) -> PyTree:
+    treedef, shapes, dtypes = spec
+    flat = flat2d.reshape(-1)[:n]
+    leaves = []
+    off = 0
+    for shp, dt in zip(shapes, dtypes):
+        size = 1
+        for s in shp:
+            size *= s
+        leaves.append(flat[off:off + size].reshape(shp).astype(dt))
+        off += size
+    return jax.tree.unflatten(treedef, leaves)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pso_update(params: PyTree, velocity: PyTree, best: PyTree,
+               gbest: PyTree, delta: PyTree, c0, c1, c2,
+               clip: float = 0.0, *,
+               interpret: bool | None = None) -> tuple[PyTree, PyTree]:
+    """Fused Eq.-8 update over a whole parameter pytree.
+
+    delta is the accumulated local SGD progress (see core/swarm_dist).
+    Returns (new_params, new_velocity) with the input tree structure.
+    """
+    if interpret is None:
+        interpret = runtime.interpret_default()
+    coefs = jnp.stack([jnp.asarray(c0, jnp.float32),
+                       jnp.asarray(c1, jnp.float32),
+                       jnp.asarray(c2, jnp.float32),
+                       jnp.asarray(clip, jnp.float32)])
+    w2, spec, n = _flatten_pad(jax.tree.map(
+        lambda x: x.astype(jnp.float32), params))
+    v2, _, _ = _flatten_pad(jax.tree.map(
+        lambda x: x.astype(jnp.float32), velocity))
+    wl2, _, _ = _flatten_pad(jax.tree.map(
+        lambda x: x.astype(jnp.float32), best))
+    wg2, _, _ = _flatten_pad(jax.tree.map(
+        lambda x: x.astype(jnp.float32), gbest))
+    d2, _, _ = _flatten_pad(jax.tree.map(
+        lambda x: x.astype(jnp.float32), delta))
+    w_new, v_new = pso_update_2d(coefs, w2, v2, wl2, wg2, d2,
+                                 interpret=interpret)
+    return _unflatten(w_new, spec, n), _unflatten(v_new, spec, n)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused PSO update kernel (Eq. 8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pso_update_ref(coefs: jax.Array, w: jax.Array, v: jax.Array,
+                   wl: jax.Array, wg: jax.Array,
+                   d: jax.Array) -> tuple[jax.Array, jax.Array]:
+    c0, c1, c2, clip = coefs[0], coefs[1], coefs[2], coefs[3]
+    v_new = c0 * v + c1 * (wl - w) + c2 * (wg - w) + d
+    v_new = jnp.where(clip > 0, jnp.clip(v_new, -clip, clip), v_new)
+    return w + v_new, v_new

@@ -1,0 +1,36 @@
+"""Public wrapper for the linear-recurrence scan kernel: pads the
+sequence to a block multiple (appending identity steps a=1, b=0 keeps the
+carried state exact) and returns states + final carry."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.rglru_scan.rglru_scan import (DEFAULT_BLOCK_S,
+                                                 rglru_scan_raw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def rglru_scan(h0: jax.Array, a: jax.Array, b: jax.Array, *,
+               block_s: int = DEFAULT_BLOCK_S,
+               interpret: bool | None = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """h0: (B, D); a, b: (B, S, D). Returns (states (B,S,D) f32,
+    final state (B,D) f32)."""
+    if interpret is None:
+        interpret = runtime.interpret_default()
+    B, S, D = a.shape
+    bs = min(block_s, max(8, S))
+    pad = -S % bs
+    if pad:
+        a = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)
+        b = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    states = rglru_scan_raw(h0.astype(jnp.float32), a.astype(jnp.float32),
+                            b.astype(jnp.float32), block_s=bs,
+                            interpret=interpret)
+    final = states[:, S - 1]  # identity padding keeps the carry constant
+    return states[:, :S], final

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the linear-recurrence scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(h0: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sequential reference: h_t = a_t h_{t-1} + b_t. Shapes as kernel."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.swapaxes(0, 1).astype(jnp.float32),
+                          b.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1)

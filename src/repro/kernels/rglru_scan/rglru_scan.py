@@ -1,0 +1,66 @@
+"""Streaming linear-recurrence scan kernel (RG-LRU / diagonal SSM core).
+
+Computes h_t = a_t * h_{t-1} + b_t over the sequence for every (batch,
+channel) lane — the inner recurrence of RecurrentGemma's RG-LRU block
+(models/recurrent.py) after the gates have produced a and b.
+
+TPU adaptation (DESIGN.md §5): recurrences are the systolic array's weak
+spot, so the kernel blocks the sequence — grid (batch, num_seq_blocks)
+with the seq dim iterating sequentially; the carried state h lives in a
+(1, D) fp32 VMEM scratch across blocks, and within a block the time loop
+is a fori_loop over rows that are fully vectorized across the 128-lane
+channel dim. HBM traffic is the theoretical minimum (read a, b once,
+write h once); XLA's associative_scan alternative is log-depth but moves
+O(S log S) intermediate data through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 256
+
+
+def _kernel(h0_ref, a_ref, b_ref, out_ref, h_scr, *, block_s: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+
+    a = a_ref[0]            # (block_s, D)
+    b = b_ref[0]
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        out_ref[0, t] = h.astype(out_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[0])
+    h_scr[...] = h[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def rglru_scan_raw(h0: jax.Array, a: jax.Array, b: jax.Array, *,
+                   block_s: int = DEFAULT_BLOCK_S,
+                   interpret: bool = True) -> jax.Array:
+    """h0: (B, D); a, b: (B, S, D) with S % block_s == 0. Returns states
+    (B, S, D) where out[:, t] = a[:,t]*out[:,t-1] + b[:,t] (out[:,-1]=h0)."""
+    B, S, D = a.shape
+    assert S % block_s == 0
+    grid = (B, S // block_s)
+    seq_spec = pl.BlockSpec((1, block_s, D), lambda i, j: (i, j, 0))
+    h0_spec = pl.BlockSpec((1, D), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[h0_spec, seq_spec, seq_spec],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(h0, a, b)

@@ -1,0 +1,7 @@
+"""Kernel runtime switches."""
+import jax
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode: True on CPU (validation), False on TPU."""
+    return jax.default_backend() != "tpu"

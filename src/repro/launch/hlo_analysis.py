@@ -1,0 +1,115 @@
+"""HLO post-processing for the dry-run: collective-bytes accounting and
+roofline terms.
+
+`collective_bytes(hlo_text)` parses the post-SPMD-partitioning HLO of the
+*per-device* program, resolves each collective op's operand shapes through
+a first-pass symbol table, and sums operand bytes per collective kind.
+`roofline(...)` combines them with cost_analysis() FLOPs/bytes into the
+three-term model of the brief (per-device program semantics: every term
+is seconds-per-step-per-chip; chips act in parallel, so no further /chips).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.launch import mesh as hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Sum operand bytes of every collective in the per-device program."""
+    # pass 1: symbol table  name -> result type string
+    symtab: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, rhs = m.groups()
+            tm = re.match(r"^\(?([\w\[\],\s\{\}\/#]*?)\)?\s+[\w\-]+\(", rhs)
+            # result type = text before the op name; simpler: first shapes
+            # up to the op keyword
+            symtab[name] = rhs
+
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        opm = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        kind = opm.group(1)
+        if "-done(" in rhs:
+            continue  # counted at -start
+        # operand names inside the call parens
+        call = rhs[opm.end():]
+        operand_names = re.findall(r"%?([\w\.\-]+)", call.split(")")[0])
+        op_bytes = 0
+        for on in operand_names:
+            if on in symtab:
+                op_bytes += _shape_bytes(symtab[on].split(" ")[0]
+                                         if "[" in symtab[on].split(" ")[0]
+                                         else symtab[on])
+        if op_bytes == 0:
+            # fall back to the result type on the def line itself
+            op_bytes = _shape_bytes(rhs.split(" ", 1)[0])
+        totals[kind] += op_bytes
+        counts[kind] += 1
+    totals_all = sum(totals.values())
+    return {"by_kind_bytes": totals, "by_kind_count": counts,
+            "total_bytes": int(totals_all)}
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes: float,
+             model_flops_per_device: float,
+             fma_counted: bool = True) -> dict[str, Any]:
+    """Three-term roofline (seconds, per-device program).
+
+    With `fma_counted=True` (XLA cost_analysis convention: one fused
+    multiply-add = ONE flop) the compute term doubles the count; the
+    while-aware HLO cost model (`hlo_costmodel.analyze`) already counts
+    2*N*M*K true flops, so it passes `fma_counted=False`.
+    `useful_flops_ratio` = MODEL_FLOPS / true_FLOPs: 1.0 means every
+    compiled flop is a model flop; < 1 flags remat/redundancy waste;
+    > 1 flags compute the analytic 6ND model misses (attention scores,
+    recurrent gates).
+    """
+    eff_flops = 2.0 * flops if fma_counted else float(flops)
+    t_compute = eff_flops / hw.PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / hw.HBM_BW
+    t_coll = coll_bytes / hw.ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops_per_device / eff_flops) if flops else 0.0
+    return {**terms, "dominant": dominant,
+            "model_flops_per_device": model_flops_per_device,
+            "useful_flops_ratio": useful,
+            "bound_step_s": max(terms.values())}

@@ -1,0 +1,23 @@
+"""Production mesh construction (required shape, see brief).
+
+`make_production_mesh` is a FUNCTION so importing this module never
+touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import to get placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (roofline targets; this container is CPU-only)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+CHIP_HBM_BYTES = 16 * 2**30    # 16 GiB

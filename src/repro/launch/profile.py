@@ -1,0 +1,110 @@
+"""Attribution profiler over dry-run HLO artifacts.
+
+Prints the multiplicity-weighted top contributors (op × computation) to
+the memory / FLOP / collective roofline terms — the tool behind the
+§Perf hypothesis loop (EXPERIMENTS.md): given a dominant term, this
+shows *which* loop body and op class to attack.
+
+Usage:
+  python -m repro.launch.profile artifacts/dryrun/deepseek-67b__train_4k__single.hlo.gz
+  python -m repro.launch.profile <artifact.hlo.gz> --term flops --top 20
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import re
+from pathlib import Path
+
+from repro.launch import hlo_costmodel as cm
+
+
+def computation_multiplicities(comps: dict, entry: str) -> dict[str, int]:
+    """while-trip-weighted execution count per computation (control-flow
+    bodies only; fusion bodies inherit their caller's count)."""
+    mult = {entry: 1}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        for ins in comps[name].instructions:
+            if ins.op != "while":
+                continue
+            m = cm._WHILE_REFS.search(ins.rest)
+            if not m:
+                continue
+            cond, body = m.groups()
+            trips = cm._trip_count(comps[cond]) if cond in comps else 1
+            for ch in (cond, body):
+                if ch not in comps:
+                    continue
+                mult[ch] = mult.get(ch, 0) + mult[name] * trips
+                if ch not in order:
+                    order.append(ch)
+    return mult
+
+
+def attribute(text: str, term: str = "memory") -> list[tuple[float, str, str]]:
+    """-> [(weighted_bytes_or_flops, computation, op)], sorted desc."""
+    comps, entry = cm.parse_hlo(text)
+    mult = computation_multiplicities(comps, entry)
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                if m:
+                    fusion_bodies.add(m.group(1))
+
+    contrib: dict[tuple[str, str], float] = {}
+    for name, comp in comps.items():
+        if name not in mult:
+            continue
+        in_fusion = name in fusion_bodies
+        symtab = comp.symtab()
+        for ins in comp.instructions:
+            v = 0.0
+            if term == "flops":
+                if ins.op == "dot":
+                    v = cm._dot_flops(ins, symtab)
+            elif term == "collective":
+                base = ins.op.replace("-start", "").replace("-done", "")
+                if base in cm.COLLECTIVES and not ins.op.endswith("-done"):
+                    v = cm._collective_payload(ins, symtab)
+            else:  # memory
+                if in_fusion:
+                    continue
+                if ins.op in cm._MATERIALIZING or ins.op == "fusion":
+                    if ins.op == "fusion" and cm._fusion_is_dus(ins, comps):
+                        v = 2 * cm._dus_update_bytes(ins, comps)
+                    else:
+                        v = cm._instr_bytes(ins, symtab)
+            if v:
+                key = (name, ins.op)
+                contrib[key] = contrib.get(key, 0.0) + v * mult[name]
+    return sorted(((v, n, o) for (n, o), v in contrib.items()),
+                  reverse=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", help=".hlo.gz or .hlo path")
+    ap.add_argument("--term", default="memory",
+                    choices=["memory", "flops", "collective"])
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    p = Path(args.artifact)
+    text = (gzip.open(p, "rt").read() if p.suffix == ".gz"
+            else p.read_text())
+    rows = attribute(text, args.term)
+    total = sum(v for v, _, _ in rows)
+    unit = "flops" if args.term == "flops" else "bytes"
+    print(f"{args.term} total: {total:.3e} {unit} "
+          f"({p.name}, while-trip weighted)")
+    for v, name, op in rows[: args.top]:
+        print(f"  {v / total * 100:5.1f}%  {v:.3e}  {op:18s} {name[:52]}")
+
+
+if __name__ == "__main__":
+    main()

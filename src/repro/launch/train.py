@@ -1,0 +1,243 @@
+"""Training driver.
+
+Two modes:
+
+  paper  — the paper's experiment (§V): C=50 edge workers, 5-layer CNN or
+           compact ResNet on synthetic MNIST/CIFAR-like data partitioned
+           iid / non-iid-I (Dir 0.5) / non-iid-II (mixed fleet, Fig. 2),
+           algorithm in {fedavg, dsl, multi_dsl, mdsl}. Writes a metrics
+           JSON (accuracy curve, comm cost, selection trace) consumed by
+           benchmarks/fig3_accuracy.py and comm_efficiency.py.
+
+  mesh   — the production path: a (reduced) assigned architecture driven
+           through core/swarm_dist.py's jitted SPMD round on the active
+           mesh, with checkpointing. On CPU this runs the same program
+           the dry-run lowers for 512 devices.
+
+Usage:
+  python -m repro.launch.train --mode paper --algorithm mdsl --case noniid2 \\
+      --dataset cifar_like --rounds 40
+  python -m repro.launch.train --mode mesh --arch smollm-360m --steps 5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import get_arch
+from repro.configs.paper_cnn import paper_cnn, paper_resnet
+from repro.core import losses as losses_mod
+from repro.core import mdsl, noniid
+from repro.core.mdsl import MdslConfig
+from repro.core.pso import PsoHyperParams
+from repro.data import partition
+from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts"
+
+def _noniid2_groups(C: int) -> list[tuple[int, float]]:
+    """Fig. 2 fleet (20 @ 0.1, 15 @ 0.5, 10 @ 1.0, 5 @ 10.0), scaled
+    proportionally to C workers (quick-mode benchmarks use C < 50)."""
+    fracs = [(0.4, 0.1), (0.3, 0.5), (0.2, 1.0), (0.1, 10.0)]
+    counts = [max(1, round(f * C)) for f, _ in fracs]
+    counts[0] += C - sum(counts)  # absorb rounding into the largest group
+    return [(c, a) for c, (_, a) in zip(counts, fracs)]
+
+
+CASES = {
+    "iid": lambda key, C, spec, n: partition.iid_partition(
+        key, C, spec, n_local=n),
+    "noniid1": lambda key, C, spec, n: partition.dirichlet_partition(
+        key, C, 0.5, spec, n_local=n),
+    "noniid2": lambda key, C, spec, n: partition.mixed_dirichlet_partition(
+        key, _noniid2_groups(C), spec, n_local=n),
+}
+SPECS = {"mnist_like": MNIST_LIKE, "cifar_like": CIFAR_LIKE}
+
+
+def make_case_data(case: str, dataset: str, num_workers: int, seed: int,
+                   n_local: int = 512):
+    spec = SPECS[dataset]
+    return CASES[case](jax.random.PRNGKey(seed), num_workers, spec,
+                       n_local), spec
+
+
+def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
+                         dataset: str = "mnist_like", rounds: int = 20,
+                         num_workers: int = 50, model: str = "cnn",
+                         width_mult: int = 8, tau: float = 0.9,
+                         local_epochs: int = 4, batch_size: int = 64,
+                         lr: float = 0.01, velocity_clip: float = 0.1,
+                         seed: int = 0, eta_coeffs: Optional[tuple] = None,
+                         n_local: int = 512, log_every: int = 1,
+                         verbose: bool = True) -> dict:
+    """One full training run; returns the metrics record."""
+    data, spec = make_case_data(case, dataset, num_workers, seed, n_local)
+    img_model = (paper_cnn(spec, width_mult) if model == "cnn"
+                 else paper_resnet(spec, width_mult))
+    L = spec.num_classes
+
+    loss_fn = lambda p, x, y: losses_mod.cross_entropy_loss(
+        img_model.apply(p, x), y, L)
+    eval_fn = lambda p, x, y: losses_mod.rmse_loss(  # Eq. 3 scoring on D_g
+        img_model.apply(p, x), y, L)
+
+    coeffs = (noniid.EtaCoefficients(*eta_coeffs) if eta_coeffs
+              else (noniid.MNIST_COEFFS if dataset == "mnist_like"
+                    else noniid.CIFAR10_COEFFS))
+    eta = noniid.noniid_degree_from_labels(data.y, data.global_y, L, coeffs)
+
+    cfg = MdslConfig(algorithm=algorithm, tau=tau, local_epochs=local_epochs,
+                     batch_size=batch_size,
+                     hp=PsoHyperParams(learning_rate=lr,
+                                       velocity_clip=velocity_clip))
+    key = jax.random.PRNGKey(seed + 1)
+    state = mdsl.init_state(key, img_model.init, num_workers, eta)
+    n_params = mdsl.count_params(state.global_params)
+
+    @jax.jit
+    def test_accuracy(params):
+        return losses_mod.accuracy(img_model.apply(params, data.test_x),
+                                   data.test_y)
+
+    record = {"algorithm": algorithm, "case": case, "dataset": dataset,
+              "model": img_model.name, "rounds": rounds,
+              "num_workers": num_workers, "tau": tau, "seed": seed,
+              "n_params": n_params, "eta": np.asarray(eta).tolist(),
+              "acc": [], "global_loss": [], "selected": [],
+              "uploaded_params": [], "round_time_s": []}
+
+    for t in range(rounds):
+        key, rkey = jax.random.split(key)
+        t0 = time.time()
+        state, metrics = mdsl.mdsl_round(
+            state, data.x, data.y, data.global_x, data.global_y, rkey,
+            loss_fn=loss_fn, eval_fn=eval_fn, cfg=cfg, n_params=n_params)
+        acc = float(test_accuracy(state.global_params))
+        record["acc"].append(acc)
+        record["global_loss"].append(float(metrics.global_loss))
+        record["selected"].append(int(metrics.selected_count))
+        record["uploaded_params"].append(float(metrics.uploaded_params))
+        record["round_time_s"].append(round(time.time() - t0, 2))
+        if verbose and (t % log_every == 0 or t == rounds - 1):
+            print(f"[{algorithm}/{case}/{dataset}] round {t + 1}/{rounds} "
+                  f"acc={acc:.3f} loss={float(metrics.global_loss):.4f} "
+                  f"selected={int(metrics.selected_count)}/{num_workers}",
+                  flush=True)
+    record["final_acc"] = record["acc"][-1]
+    record["best_acc"] = max(record["acc"])
+    record["total_uploaded_params"] = float(sum(record["uploaded_params"]))
+    return record
+
+
+def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
+                      seq_len: int = 128, per_worker_batch: int = 2,
+                      num_spatial: int = 2, ckpt_dir: Optional[str] = None,
+                      seed: int = 0, verbose: bool = True) -> dict:
+    """Production path on the active devices: DistSwarm round on a
+    (reduced) assigned arch. On a real TPU mesh the same builder is used
+    with the full config via launch/steps.py; on CPU we exercise the jitted
+    round end-to-end (real allocation, so reduced=True is required)."""
+    from repro.core import swarm_dist
+    from repro.core.swarm_dist import DistSwarmConfig
+    from repro.models.transformer import Transformer
+
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = Transformer(cfg)
+    dcfg = DistSwarmConfig(worker_axes=(), num_spatial=num_spatial,
+                           local_steps=1, tau=0.9,
+                           hp=PsoHyperParams(learning_rate=3e-3,
+                                             velocity_clip=1.0))
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    state = swarm_dist.init_state(params, dcfg)
+    step_fn = jax.jit(swarm_dist.build_train_step(model.loss, dcfg))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    W, B, S = num_spatial, per_worker_batch, seq_len
+
+    def batch_for(k, lead):
+        toks = jax.random.randint(k, lead + (B, S), 0, cfg.vocab_size)
+        out = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+        if cfg.input_mode == "tokens+prefix":
+            out["prefix"] = jnp.zeros(lead + (B, cfg.prefix_len, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+        if cfg.encoder_layers:
+            out["frames"] = jax.random.normal(
+                k, lead + (B, cfg.encoder_memory_len, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return out
+
+    record = {"arch": arch, "reduced": reduced, "steps": steps,
+              "global_loss": [], "selected": [], "step_time_s": []}
+    for i in range(steps):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        t0 = time.time()
+        state, info = step_fn(state, batch_for(k1, (W,)), batch_for(k2, ()),
+                              k3)
+        gl = float(info.global_loss)
+        record["global_loss"].append(gl)
+        record["selected"].append(float(info.mask.sum()))
+        record["step_time_s"].append(round(time.time() - t0, 2))
+        if verbose:
+            print(f"[mesh/{arch}] step {i + 1}/{steps} global_loss={gl:.4f} "
+                  f"selected={int(info.mask.sum())}/{W}", flush=True)
+        if mgr is not None:
+            mgr.save(i, state.global_params, metadata={"arch": arch})
+    if mgr is not None:
+        record["ckpt_steps"] = mgr.all_steps()
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="paper", choices=["paper", "mesh"])
+    # paper mode
+    ap.add_argument("--algorithm", default="mdsl",
+                    choices=["fedavg", "dsl", "multi_dsl", "mdsl"])
+    ap.add_argument("--case", default="noniid1", choices=list(CASES))
+    ap.add_argument("--dataset", default="mnist_like", choices=list(SPECS))
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=50)
+    ap.add_argument("--model", default="cnn", choices=["cnn", "resnet"])
+    ap.add_argument("--width-mult", type=int, default=8)
+    ap.add_argument("--tau", type=float, default=0.9)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    # mesh mode
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.mode == "paper":
+        rec = run_paper_experiment(
+            algorithm=args.algorithm, case=args.case, dataset=args.dataset,
+            rounds=args.rounds, num_workers=args.workers, model=args.model,
+            width_mult=args.width_mult, tau=args.tau, seed=args.seed)
+        out = args.out or (ARTIFACTS / "train" /
+                           f"{args.algorithm}__{args.case}__{args.dataset}"
+                           f"__s{args.seed}.json")
+    else:
+        rec = run_mesh_training(args.arch, steps=args.steps,
+                                ckpt_dir=args.ckpt_dir, seed=args.seed)
+        out = args.out or (ARTIFACTS / "train" / f"mesh__{args.arch}.json")
+    out = Path(out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

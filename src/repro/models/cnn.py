@@ -1,0 +1,130 @@
+"""Paper-experiment models: the 5-layer CNN of DSL [9] and a compact
+ResNet (stand-in for ResNet18 at CPU-tractable width), pure JAX.
+
+Models are (init, apply) pairs over nested-dict params; apply maps
+(params, x[N,H,W,C]) -> logits[N,L]. Widths are configurable so the C=50
+vmap'ed swarm stays fast on one CPU core while keeping the architecture
+shape of the paper's models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class ImageModel(NamedTuple):
+    init: Callable[[Array], PyTree]
+    apply: Callable[[PyTree, Array], Array]
+    name: str
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def _dense_init(key, din, dout):
+    w = jax.random.normal(key, (din, dout)) * jnp.sqrt(2.0 / din)
+    return {"w": w, "b": jnp.zeros((dout,))}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def _meanpool_all(x):
+    return x.mean(axis=(1, 2))
+
+
+def make_cnn5(height: int, width: int, channels: int, num_classes: int,
+              width_mult: int = 8) -> ImageModel:
+    """Five-layer CNN [9]: conv-pool, conv-pool, conv, dense, dense."""
+    c1, c2, c3 = width_mult, 2 * width_mult, 2 * width_mult
+    h3, w3 = height // 4, width // 4
+    feat = h3 * w3 * c3
+    hidden = 4 * width_mult
+
+    def init(key: Array) -> PyTree:
+        ks = jax.random.split(key, 5)
+        return {
+            "conv1": _conv_init(ks[0], 3, 3, channels, c1),
+            "conv2": _conv_init(ks[1], 3, 3, c1, c2),
+            "conv3": _conv_init(ks[2], 3, 3, c2, c3),
+            "fc1": _dense_init(ks[3], feat, hidden),
+            "fc2": _dense_init(ks[4], hidden, num_classes),
+        }
+
+    def apply(params: PyTree, x: Array) -> Array:
+        x = _maxpool(jax.nn.relu(_conv(params["conv1"], x)))
+        x = _maxpool(jax.nn.relu(_conv(params["conv2"], x)))
+        x = jax.nn.relu(_conv(params["conv3"], x))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(_dense(params["fc1"], x))
+        return _dense(params["fc2"], x)
+
+    return ImageModel(init=init, apply=apply, name=f"cnn5_w{width_mult}")
+
+
+def make_resnet(height: int, width: int, channels: int, num_classes: int,
+                width_mult: int = 8, blocks_per_stage: int = 2) -> ImageModel:
+    """Compact pre-activation ResNet (2 stages x `blocks_per_stage` residual
+    blocks) — the paper's ResNet18 scaled to CPU width. Uses GroupNorm-free
+    residual blocks (normalization-free scaling) to stay vmap-friendly."""
+    c1, c2 = width_mult, 2 * width_mult
+
+    def block_init(key, cin, cout, idx):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {"conv_a": _conv_init(k1, 3, 3, cin, cout),
+             "conv_b": _conv_init(k2, 3, 3, cout, cout)}
+        if cin != cout:
+            p["proj"] = _conv_init(k3, 1, 1, cin, cout)
+        return p
+
+    def block_apply(p, x, stride):
+        h = jax.nn.relu(_conv(p["conv_a"], x, stride))
+        h = _conv(p["conv_b"], h)
+        skip = _conv(p["proj"], x, stride) if "proj" in p else x
+        return jax.nn.relu(skip + 0.5 * h)
+
+    def init(key: Array) -> PyTree:
+        n = 2 + 2 * blocks_per_stage
+        ks = jax.random.split(key, n)
+        p = {"stem": _conv_init(ks[0], 3, 3, channels, c1)}
+        cin = c1
+        i = 1
+        for stage, cout in enumerate((c1, c2)):
+            for b in range(blocks_per_stage):
+                p[f"s{stage}b{b}"] = block_init(ks[i], cin, cout, i)
+                cin = cout
+                i += 1
+        p["head"] = _dense_init(ks[i], c2, num_classes)
+        return p
+
+    def apply(params: PyTree, x: Array) -> Array:
+        x = jax.nn.relu(_conv(params["stem"], x))
+        for stage in range(2):
+            for b in range(blocks_per_stage):
+                stride = 2 if (b == 0 and stage > 0) else 1
+                x = block_apply(params[f"s{stage}b{b}"], x, stride)
+        return _dense(params["head"], _meanpool_all(x))
+
+    return ImageModel(init=init, apply=apply, name=f"resnet_w{width_mult}")

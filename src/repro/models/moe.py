@@ -1,0 +1,137 @@
+"""Mixture-of-Experts channel mixer (top-k routing, sort-based dispatch).
+
+TPU-native dispatch (DESIGN.md §5): tokens are argsorted by expert
+assignment, packed into per-expert capacity buffers, run through a single
+vmapped expert FFN einsum (MXU-friendly (E, cap, d) x (E, d, f)), and
+scatter-combined back weighted by the router gate. Capacity-overflow
+tokens are dropped (standard GShard semantics, capacity_factor
+configurable). With the expert dim sharded over the mesh "expert" axis
+(rules table: the data axis in FSDP mode) the pack/unpack gathers lower
+to all-to-all-style collectives — the communication pattern the roofline
+tracks for the MoE architectures.
+
+Router load-balancing: the auxiliary loss of Shazeer et al. (mean gate
+fraction x mean dispatch fraction per expert) is returned alongside the
+output so the trainer can add it to the task loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cdtype, dense_init, rmsnorm, rmsnorm_init
+from repro.sharding import shard
+
+Array = jax.Array
+PyTree = Any
+
+
+def moe_init(key: Array, cfg) -> PyTree:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cdtype(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "norm": rmsnorm_init(d),
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "wi": dense_init(ks[1], (E, d, f), in_axis=1, dtype=dt),
+        "wu": dense_init(ks[2], (E, d, f), in_axis=1, dtype=dt),
+        "wo": dense_init(ks[3], (E, f, d), in_axis=1, dtype=dt),
+    }
+    if cfg.dense_residual:  # arctic: parallel dense MLP
+        kd = jax.random.split(ks[4], 3)
+        p["dense"] = {
+            "wi": dense_init(kd[0], (d, f), dtype=dt),
+            "wu": dense_init(kd[1], (d, f), dtype=dt),
+            "wo": dense_init(kd[2], (f, d), dtype=dt),
+        }
+    return p
+
+
+def moe_apply(params: PyTree, x: Array, cfg) -> tuple[Array, Array]:
+    """Returns (y, aux_loss). x: (B, S, D)."""
+    capacity_factor = cfg.moe_capacity_factor
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+
+    # expert-parallel all-to-all dispatch (shard_map) when the rules
+    # enable it — see moe_ep.py; falls through to the GSPMD sort-based
+    # dispatch otherwise (CPU tests / vmapped tp-mode swarm)
+    from repro.models import moe_ep
+    from repro.sharding.rules import get_rules
+    rules, mesh = get_rules()
+    ep_axis = moe_ep.ep_applicable(cfg, mesh, rules)
+    if ep_axis is not None and B % mesh.shape[ep_axis] == 0:
+        y, aux_loss = moe_ep.moe_apply_ep(params, h, cfg, mesh, ep_axis)
+        if "dense" in params:  # arctic dense residual
+            dp = params["dense"]
+            a = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, dp["wi"]))
+            u = jnp.einsum("bsd,df->bsf", h, dp["wu"])
+            y = y + jnp.einsum("bsf,fd->bsd", a * u, dp["wo"])
+        return shard(y, ("batch", "seq", "embed")), aux_loss
+    hf = h.reshape(B * S, D)
+    T = B * S
+
+    logits = (hf.astype(jnp.float32) @ params["router"])         # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                  # renorm
+
+    # auxiliary load-balance loss (Shazeer): E * sum_e f_e * p_e
+    dispatch_frac = jnp.zeros((E,), jnp.float32).at[
+        expert_idx.reshape(-1)].add(1.0) / (T * K)
+    gate_frac = probs.mean(axis=0)
+    aux_loss = E * jnp.sum(dispatch_frac * gate_frac)
+
+    cap = int(math.ceil(T * K / E * capacity_factor))
+    cap = max(cap, 1)
+
+    # --- pack: sort (token, k) pairs by expert, take first `cap` each ---
+    flat_e = expert_idx.reshape(T * K)                           # (TK,)
+    sort_idx = jnp.argsort(flat_e)                               # (TK,)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * K) - starts[sorted_e]                   # rank in expert
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, E * cap)        # drop slot
+    src_token = sort_idx // K
+
+    buf = jnp.zeros((E * cap + 1, D), h.dtype)
+    buf = buf.at[dest].set(hf[src_token])
+    xs = buf[: E * cap].reshape(E, cap, D)
+    xs = shard(xs, ("expert", None, "embed"))
+
+    # --- expert FFN (gated) ---
+    wi = shard(params["wi"], ("expert", "embed_fsdp", "expert_mlp"))
+    wu = shard(params["wu"], ("expert", "embed_fsdp", "expert_mlp"))
+    wo = shard(params["wo"], ("expert", "expert_mlp", "embed_fsdp"))
+    a = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wi))
+    u = jnp.einsum("ecd,edf->ecf", xs, wu)
+    ys = jnp.einsum("ecf,efd->ecd", a * u, wo)                   # (E,cap,D)
+    ys = shard(ys, ("expert", None, "embed"))
+
+    # --- combine: gather back, weight by gate, sum over k ---
+    ys_flat = jnp.concatenate(
+        [ys.reshape(E * cap, D), jnp.zeros((1, D), ys.dtype)], axis=0)
+    slot_of_sorted = jnp.where(keep, dest, E * cap)
+    # invert the sort: slot of flat (token,k) pair j is slot_of_sorted[rank_j]
+    inv = jnp.zeros((T * K,), jnp.int32).at[sort_idx].set(
+        jnp.arange(T * K, dtype=jnp.int32))
+    slot = slot_of_sorted[inv].reshape(T, K)
+    contrib = ys_flat[slot]                                      # (T,K,D)
+    yf = jnp.einsum("tkd,tk->td", contrib.astype(jnp.float32),
+                    gate_vals).astype(x.dtype)
+    y = yf.reshape(B, S, D)
+
+    if "dense" in params:  # arctic dense residual
+        dp = params["dense"]
+        a = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, dp["wi"]))
+        u = jnp.einsum("bsd,df->bsf", h, dp["wu"])
+        y = y + jnp.einsum("bsf,fd->bsd", a * u, dp["wo"])
+
+    return shard(y, ("batch", "seq", "embed")), aux_loss

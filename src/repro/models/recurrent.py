@@ -1,0 +1,412 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (RecurrentGemma,
+arXiv:2402.19427) and xLSTM's mLSTM / sLSTM (arXiv:2405.04517), pure JAX.
+
+All three expose the same interface as attention blocks:
+    init(key, cfg) -> params
+    apply(params, x, cfg, mode, layer_cache) -> (y, new_cache)
+with constant-size recurrent caches (the reason these archs run the
+long_500k decode shape).
+
+Parallel-scan strategy (TPU adaptation, DESIGN.md §5):
+* RG-LRU is a diagonal linear recurrence  h_t = a_t * h_{t-1} + b_t, so
+  train/prefill use jax.lax.associative_scan (log-depth).
+* mLSTM's matrix memory is chunk-parallelized: within a chunk the output
+  is a masked quadratic form (attention-like, MXU-friendly); across chunks
+  a (hd x hd) state is carried. Exponential gating is stabilized in log
+  space with a running max, matching the xLSTM paper's formulation.
+* sLSTM has a true sequential dependence (recurrent weights act on h_{t-1})
+  and cannot be parallelized (xLSTM paper §2.3); train/prefill scan over
+  time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import cdtype, dense_init, rmsnorm, rmsnorm_init
+from repro.sharding import shard
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+# x -> norm -> { branch_y = gelu(W_y x) ; branch_x = conv1d_4(W_x x) ->
+#   RG-LRU } -> W_o (branch_y * lru_out)
+# RG-LRU: r_t = sigmoid(W_r u + b_r); i_t = sigmoid(W_i u + b_i)
+#         a_t = exp(c * softplus(Lambda) * (-r_t))        (c = 8)
+#         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+_RGLRU_C = 8.0
+_CONV_W = 4
+
+
+def rglru_init(key: Array, cfg) -> PyTree:
+    d = cfg.d_model
+    dt = cdtype(cfg)
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^c spans (0.9, 0.999) like the paper
+    lam = jax.random.uniform(ks[5], (d,), minval=0.9, maxval=0.999)
+    lam_param = jnp.log(jnp.exp(-jnp.log(lam) / _RGLRU_C) - 1.0)  # inv softplus
+    return {
+        "norm": rmsnorm_init(d),
+        "wx": dense_init(ks[0], (d, d), dtype=dt),
+        "wy": dense_init(ks[1], (d, d), dtype=dt),
+        "wo": dense_init(ks[2], (d, d), dtype=dt),
+        "conv": dense_init(ks[3], (_CONV_W, d), dtype=dt) / math.sqrt(_CONV_W),
+        "w_r": dense_init(ks[4], (d, d), dtype=dt),
+        "w_i": dense_init(ks[6], (d, d), dtype=dt),
+        "b_r": jnp.zeros((d,), dt),
+        "b_i": jnp.zeros((d,), dt),
+        "lam": lam_param.astype(jnp.float32),
+    }
+
+
+def _causal_conv(w: Array, x: Array, state: Optional[Array]
+                 ) -> tuple[Array, Array]:
+    """Depthwise causal conv, width 4. x: (B,S,D); state: (B, W-1, D)."""
+    B, S, D = x.shape
+    if state is None:
+        state = jnp.zeros((B, _CONV_W - 1, D), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(_CONV_W))
+    return out, xp[:, -( _CONV_W - 1):]
+
+
+def _rglru_gates(params: PyTree, u: Array) -> tuple[Array, Array]:
+    """Returns (log_a, beta*i*u) in fp32. u: (B,S,D)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, params["w_r"])
+                       .astype(jnp.float32) + params["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, params["w_i"])
+                       .astype(jnp.float32) + params["b_i"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r  # (B,S,D) fp32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return log_a, beta * i * u.astype(jnp.float32)
+
+
+def rglru_apply(params: PyTree, x: Array, cfg, *, mode: str,
+                layer_cache: Optional[PyTree] = None
+                ) -> tuple[Array, Optional[PyTree]]:
+    B, S, D = x.shape
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,de->bse", h, params["wy"]))
+    u = jnp.einsum("bsd,de->bse", h, params["wx"])
+    conv_state = None if layer_cache is None else layer_cache["conv"]
+    u, new_conv = _causal_conv(params["conv"], u, conv_state)
+    log_a, b = _rglru_gates(params, u)
+
+    h0 = (jnp.zeros((B, D), jnp.float32) if layer_cache is None
+          else layer_cache["h"])
+
+    if mode == "decode" and S == 1:
+        a = jnp.exp(log_a[:, 0])
+        h_new = a * h0 + b[:, 0]
+        states = h_new[:, None]
+    else:
+        # associative scan over the diagonal recurrence, folding in h0
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_seq = jnp.exp(log_a)
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a_seq[:, 0] * h0)
+        _, states = jax.lax.associative_scan(combine, (a_seq, b), axis=1)
+        h_new = states[:, -1]
+
+    states = shard(states.astype(x.dtype), ("batch", "seq", "embed"))
+    out = jnp.einsum("bse,ed->bsd", y_branch * states, params["wo"])
+    out = shard(out, ("batch", "seq", "embed"))
+    cache = None
+    if layer_cache is not None:
+        cache = {"h": h_new, "conv": new_conv}
+    return out, cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> PyTree:
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+# Recurrence per head (state C: (hd_v, hd_k), n: (hd_k,), m: ()):
+#   f_t = sigmoid(f_raw);  i_t = exp(i_raw)    (log-space stabilized)
+#   m_t = max(log f_t + m_{t-1}, log i_t)
+#   C_t = exp(log f_t + m_{t-1} - m_t) C_{t-1} + exp(log i_t - m_t) v_t k_t^T
+#   n_t = ... same ... + exp(log i_t - m_t) k_t
+#   h_t = C_t q_t / max(|n_t . q_t|, exp(-m_t))
+# Block: norm -> up-proj (expansion 2) -> q,k,v + gates -> recurrence ->
+#        out-gate * norm(h) -> down-proj. (Simplified block wiring keeping
+#        the memory cell faithful.)
+
+_MLSTM_EXP = 2
+
+
+def mlstm_init(key: Array, cfg) -> PyTree:
+    d = cfg.d_model
+    di = _MLSTM_EXP * d
+    H = cfg.num_heads
+    dt = cdtype(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(d),
+        "w_up": dense_init(ks[0], (d, di), dtype=dt),
+        "w_gate": dense_init(ks[1], (d, di), dtype=dt),
+        "mq": dense_init(ks[2], (di, di), dtype=dt),
+        "mk": dense_init(ks[3], (di, di), dtype=dt),
+        "mv": dense_init(ks[4], (di, di), dtype=dt),
+        "w_if": dense_init(ks[5], (di, 2 * H), dtype=dt),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "out_norm": rmsnorm_init(di),
+        "w_down": dense_init(ks[6], (di, d), dtype=dt),
+    }
+
+
+def _mlstm_qkvg(params, x, cfg):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h, params["w_up"])
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", h, params["w_gate"]))
+    di = up.shape[-1]
+    hd = di // H
+    q = jnp.einsum("bse,ef->bsf", up, params["mq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bse,ef->bsf", up, params["mk"]).reshape(B, S, H, hd)
+    k = k / math.sqrt(hd)
+    v = jnp.einsum("bse,ef->bsf", up, params["mv"]).reshape(B, S, H, hd)
+    if_raw = (jnp.einsum("bse,eh->bsh", up, params["w_if"])
+              .astype(jnp.float32) + params["b_if"])
+    log_i = if_raw[..., :H]                      # log input gate (pre-exp)
+    log_f = jax.nn.log_sigmoid(if_raw[..., H:])  # log sigmoid forget
+    return q, k, v, gate, log_i, log_f
+
+
+def mlstm_sequential(q, k, v, log_i, log_f, C0, n0, m0):
+    """Exact per-step recurrence (reference + decode). Shapes:
+    q/k/v (B,S,H,hd); gates (B,S,H); states C (B,H,hd,hd), n (B,H,hd),
+    m (B,H). Returns (h (B,S,H,hd), C, n, m)."""
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs  # (B,H,hd), (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        fa = jnp.exp(lf + m - m_new)[..., None]
+        ia = jnp.exp(li - m_new)[..., None]
+        C = fa[..., None] * C + ia[..., None] * (vt[..., None] * kt[..., None, :])
+        n = fa * n + ia * kt
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                            jnp.exp(-m_new))
+        h = jnp.einsum("bhvk,bhk->bhv", C, qt) / denom[..., None]
+        return (C, n, m_new), h
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          log_i.swapaxes(0, 1), log_f.swapaxes(0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.swapaxes(0, 1), C, n, m
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, C0, n0, m0, chunk: int = 256):
+    """Chunk-parallel mLSTM: within-chunk masked quadratic form (MXU
+    matmuls) + cross-chunk (C, n, m) carry. Exactly equals
+    mlstm_sequential (see tests/test_recurrent.py).
+
+    Derivation: unrolling the stabilized recurrence gives, for target t,
+      m_t           = max( m_0 + F_t ,  max_{s<=t} A[t,s] )
+      C_t q_t       = e^{m_0+F_t-m_t} C_0 q_t
+                      + sum_{s<=t} e^{A[t,s]-m_t} (k_s.q_t) v_s
+    with F_t = sum_{u<=t} log f_u and A[t,s] = log i_s + F_t - F_s —
+    the max commutes through the recurrence, so the chunk-local running
+    max is exact, not an approximation.
+    """
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zpad) for a in (q, k, v))
+        # padded sources get -inf input gate (no contribution); padded
+        # forget gets 0 so the end-of-chunk carry equals the true final state
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def resh(a):
+        return (a.reshape((B, nc, chunk) + a.shape[2:])
+                .swapaxes(0, 1).astype(jnp.float32))
+
+    qc, kc, vc, lic, lfc = map(resh, (q, k, v, log_i, log_f))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry             # (B,H,hd,hd), (B,H,hd), (B,H)
+        qt, kt, vt, li, lf = xs     # (B,c,H,hd) / (B,c,H)
+        F = jnp.cumsum(lf, axis=1)                       # (B,c,H)
+        carry_logw = F + m[:, None]                      # (B,c,H)
+        A = li[:, None] + F[:, :, None] - F[:, None]     # (B,t,s,H)
+        A = jnp.where(tri[None, :, :, None], A, -jnp.inf)
+        m_t = jnp.maximum(carry_logw, A.max(axis=2))     # (B,c,H)
+        w_carry = jnp.exp(carry_logw - m_t)              # (B,c,H)
+        W = jnp.exp(A - m_t[:, :, None])                 # (B,t,s,H)
+        W = jnp.where(tri[None, :, :, None], W, 0.0)
+
+        scores = jnp.einsum("bthd,bshd->btsh", qt, kt) * W
+        num = (jnp.einsum("btsh,bshd->bthd", scores, vt)
+               + w_carry[..., None] * jnp.einsum("bhvk,bthk->bthv", C, qt))
+        n_t = (jnp.einsum("btsh,bshd->bthd", W, kt)
+               + w_carry[..., None] * n[:, None])
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, qt)),
+                            jnp.exp(-m_t))
+        h = num / denom[..., None]
+
+        m_new = m_t[:, -1]
+        wl = W[:, -1]                                    # (B,s,H)
+        C_new = (w_carry[:, -1][..., None, None] * C
+                 + jnp.einsum("bsh,bshv,bshk->bhvk", wl, vt, kt))
+        n_new = w_carry[:, -1][..., None] * n + jnp.einsum(
+            "bsh,bshk->bhk", wl, kt)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qc, kc, vc, lic, lfc))
+    hs = hs.swapaxes(0, 1).reshape(B, nc * chunk, H, hd)[:, :S]
+    return hs, C, n, m
+
+
+def mlstm_block_apply(params: PyTree, x: Array, cfg, *, mode: str,
+                      layer_cache: Optional[PyTree] = None
+                      ) -> tuple[Array, Optional[PyTree]]:
+    B, S, D = x.shape
+    H = cfg.num_heads
+    q, k, v, gate, log_i, log_f = _mlstm_qkvg(params, x, cfg)
+    hd = q.shape[-1]
+    if layer_cache is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0, n0, m0 = layer_cache["C"], layer_cache["n"], layer_cache["m"]
+
+    if S == 1:
+        hs, C, n, m = mlstm_sequential(q, k, v, log_i, log_f, C0, n0, m0)
+    else:
+        hs, C, n, m = mlstm_chunked(q, k, v, log_i, log_f, C0, n0, m0)
+    hs = hs.reshape(B, S, H * hd).astype(x.dtype)
+    hs = rmsnorm(params["out_norm"], hs, cfg.norm_eps) * gate
+    out = jnp.einsum("bse,ed->bsd", hs, params["w_down"])
+    out = shard(out, ("batch", "seq", "embed"))
+    cache = None
+    if layer_cache is not None:
+        cache = {"C": C, "n": n, "m": m}
+    return out, cache
+
+
+def init_mlstm_cache(cfg, batch: int) -> PyTree:
+    H = cfg.num_heads
+    hd = _MLSTM_EXP * cfg.d_model // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM scalar memory, sequential)
+# ---------------------------------------------------------------------------
+# Per head-channel: c_t = f c_{t-1} + i z;  n_t = f n_{t-1} + i;
+# h_t = o * c_t / n_t, with exp input gate (m-stabilized), sigmoid output
+# gate, and recurrent weights (block-diag per head) feeding all gates.
+
+_SLSTM_FF = 4 / 3
+
+
+def slstm_init(key: Array, cfg) -> PyTree:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    dt = cdtype(cfg)
+    ks = jax.random.split(key, 8)
+    d_ff = int(_SLSTM_FF * d)
+    return {
+        "norm": rmsnorm_init(d),
+        # input weights for z, i, f, o
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype=dt),
+        # recurrent weights, block-diagonal per head: (H, hd, 4*hd)
+        "w_rec": dense_init(ks[1], (H, hd, 4 * hd), in_axis=1, dtype=dt),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "out_norm": rmsnorm_init(d),
+        # post-FFN (xLSTM sLSTM block, factor 4/3)
+        "ff_up": dense_init(ks[2], (d, d_ff), dtype=dt),
+        "ff_gate": dense_init(ks[3], (d, d_ff), dtype=dt),
+        "ff_down": dense_init(ks[4], (d_ff, d), dtype=dt),
+    }
+
+
+def slstm_apply(params: PyTree, x: Array, cfg, *, mode: str,
+                layer_cache: Optional[PyTree] = None
+                ) -> tuple[Array, Optional[PyTree]]:
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    xin = rmsnorm(params["norm"], x, cfg.norm_eps)
+    pre = jnp.einsum("bsd,de->bse", xin, params["w_in"]).astype(jnp.float32)
+    pre = pre + params["b"]
+
+    if layer_cache is None:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+        h0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        c0, n0, m0, h0 = (layer_cache[k] for k in ("c", "n", "m", "h"))
+
+    w_rec = params["w_rec"].astype(jnp.float32)
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhk,hke->bhe", h.reshape(B, H, hd), w_rec)
+        rec = rec.reshape(B, 4 * D)
+        zr, ir, fr, orr = jnp.split(pre_t + rec, 4, axis=-1)
+        z = jnp.tanh(zr)
+        log_i = ir
+        log_f = jax.nn.log_sigmoid(fr)
+        m_new = jnp.maximum(log_f + m, log_i)
+        fa = jnp.exp(log_f + m - m_new)
+        ia = jnp.exp(log_i - m_new)
+        c_new = fa * c + ia * z
+        n_new = fa * n + ia
+        h_new = jax.nn.sigmoid(orr) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), hs = jax.lax.scan(step, (c0, n0, m0, h0),
+                                    pre.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,D)
+    hs = rmsnorm(params["out_norm"], hs, cfg.norm_eps)
+    # block FFN (gated, factor 4/3)
+    a = jax.nn.silu(jnp.einsum("bsd,df->bsf", hs, params["ff_gate"]))
+    u = jnp.einsum("bsd,df->bsf", hs, params["ff_up"])
+    out = jnp.einsum("bsf,fd->bsd", a * u, params["ff_down"])
+    out = shard(out, ("batch", "seq", "embed"))
+    cache = None
+    if layer_cache is not None:
+        cache = {"c": c, "n": n, "m": m, "h": h}
+    return out, cache
+
+
+def init_slstm_cache(cfg, batch: int) -> PyTree:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}

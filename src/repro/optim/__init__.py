@@ -1,0 +1,5 @@
+from repro.optim.sgd import (Optimizer, OptState, sgd, momentum_sgd,
+                             adamw, apply_updates, global_norm, clip_by_global_norm)
+from repro.optim.schedules import (constant, step_decay, cosine_decay,
+                                   warmup_cosine, Schedule)
+from repro.optim.pso_optimizer import pso_hybrid, PsoOptState

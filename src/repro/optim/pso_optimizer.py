@@ -1,0 +1,82 @@
+"""The paper's Eq.-8 PSO-hybrid update packaged as an `Optimizer`.
+
+This exposes M-DSL's local update through the same (init, update)
+interface as sgd/adamw, so the production trainer can swap the paper's
+technique in/out with one config flag. The swarm-level state (local best,
+global best) is carried in the optimizer state; coefficients are
+re-sampled per round via the step's PRNG fold.
+
+    v' = c0 v + c1 (w_l - w) + c2 (w_g - w) - lr * g
+    update = v'
+
+The local/global best refresh (Eqs. 9-10) is event-driven on losses, so
+it is exposed as a separate `observe(state, params, loss, global_params,
+global_loss)` transition rather than inside `update`.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pso
+from repro.optim.schedules import Schedule
+from repro.optim.sgd import Optimizer, _as_schedule
+
+Array = jax.Array
+PyTree = Any
+
+
+class PsoOptState(NamedTuple):
+    velocity: PyTree
+    best_params: PyTree          # w^l (Eq. 9)
+    best_loss: Array
+    gbest_params: PyTree         # w^g-bar (Eq. 10)
+    gbest_loss: Array
+    key: Array
+
+
+def pso_hybrid(lr: Union[float, Schedule], velocity_clip: float = 0.0,
+               seed: int = 0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        inf = jnp.asarray(jnp.inf, jnp.float32)
+        return PsoOptState(
+            velocity=jax.tree.map(jnp.zeros_like, params),
+            best_params=params, best_loss=inf,
+            gbest_params=params, gbest_loss=inf,
+            key=jax.random.PRNGKey(seed))
+
+    def update(grads, state, params, step):
+        key = jax.random.fold_in(state.key, step)
+        coeffs = pso.sample_coefficients(key)
+        lr_t = sched(step)
+
+        def leaf(w, v, wl, wg, g):
+            v_new = (coeffs.c0 * v + coeffs.c1 * (wl - w)
+                     + coeffs.c2 * (wg - w) - lr_t * g)
+            if velocity_clip > 0.0:
+                v_new = jnp.clip(v_new, -velocity_clip, velocity_clip)
+            return v_new.astype(w.dtype)
+
+        v_next = jax.tree.map(leaf, params, state.velocity,
+                              state.best_params, state.gbest_params, grads)
+        return v_next, state._replace(velocity=v_next)
+
+    return Optimizer(init=init, update=update)
+
+
+def observe(state: PsoOptState, params: PyTree, loss: Array,
+            global_params: PyTree, global_loss: Array) -> PsoOptState:
+    """Eqs. 9-10 best refresh after a round's evaluation."""
+    sel = lambda c, n, o: jax.tree.map(
+        lambda a, b: jnp.where(c, a, b), n, o)
+    li = loss < state.best_loss
+    gi = global_loss < state.gbest_loss
+    return state._replace(
+        best_params=sel(li, params, state.best_params),
+        best_loss=jnp.where(li, loss, state.best_loss),
+        gbest_params=sel(gi, global_params, state.gbest_params),
+        gbest_loss=jnp.where(gi, global_loss, state.gbest_loss))

@@ -1,0 +1,45 @@
+"""Learning-rate schedules (pure functions of the int step).
+
+The paper uses an attenuated learning rate alpha_init * gamma^(t // k)
+(§V-A: alpha_init=0.01, gamma=0.5) — `step_decay` is that schedule;
+the rest are standard production schedules for the mesh trainer.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(init_lr: float, gamma: float = 0.5,
+               every: int = 10) -> Schedule:
+    """Paper §V-A attenuation: lr = init * gamma^(step // every)."""
+    def fn(step):
+        e = jnp.asarray(step // every, jnp.float32)
+        return init_lr * (gamma ** e)
+    return fn
+
+
+def cosine_decay(init_lr: float, total_steps: int,
+                 final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return init_lr * (final_frac + (1.0 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(init_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    cos = cosine_decay(init_lr, max(total_steps - warmup_steps, 1),
+                       final_frac)
+    def fn(step):
+        warm = init_lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return fn

@@ -1,0 +1,141 @@
+"""Hand-rolled optimizers over parameter pytrees (no optax offline).
+
+An `Optimizer` is an (init, update) pair in the optax style:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+Updates are *deltas to add* (the sign is already folded in). All
+optimizer states are pytrees of the same structure as the params, so they
+shard identically (the mesh trainer reuses the param shardings).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedules import Schedule, constant
+
+Array = jax.Array
+PyTree = Any
+OptState = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], OptState]
+    update: Callable[..., tuple[PyTree, OptState]]  # (grads, state, params, step)
+
+
+def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
+    return constant(lr) if isinstance(lr, (int, float)) else lr
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree)
+
+
+def sgd(lr: Union[float, Schedule],
+        weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        def leaf(g, p):
+            if weight_decay:
+                g = g + weight_decay * p.astype(g.dtype)
+            return (-lr_t * g).astype(p.dtype)
+        return jax.tree.map(leaf, grads, params), state
+
+    return Optimizer(init=init, update=update)
+
+
+class MomentumState(NamedTuple):
+    momentum: PyTree
+
+
+def momentum_sgd(lr: Union[float, Schedule], beta: float = 0.9,
+                 nesterov: bool = False,
+                 weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return MomentumState(jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+
+        def mom(m, g, p):
+            if weight_decay:
+                g = g + weight_decay * p.astype(g.dtype)
+            return (beta * m + g).astype(m.dtype)
+
+        m_next = jax.tree.map(mom, state.momentum, grads, params)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g, p: (-lr_t * (beta * m + g)).astype(p.dtype),
+                m_next, grads, params)
+        else:
+            upd = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype),
+                               m_next, params)
+        return upd, MomentumState(m_next)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(mu=z(), nu=z())
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def mu_f(m, g):
+            return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+        def nu_f(v, g):
+            g32 = g.astype(jnp.float32)
+            return b2 * v + (1 - b2) * g32 * g32
+
+        mu = jax.tree.map(mu_f, state.mu, grads)
+        nu = jax.tree.map(nu_f, state.nu, grads)
+
+        def upd(m, v, p):
+            step_ = m / c1 / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * step_).astype(p.dtype)
+
+        return jax.tree.map(upd, mu, nu, params), AdamWState(mu, nu)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,148 @@
+"""Per-leaf PartitionSpecs for parameter / cache pytrees, by tree path.
+
+`spec_for_path(path, shape, rules, mesh)` matches the leaf's path suffix
+against a table of logical-axis layouts (right-aligned to the leaf rank —
+leading stack dims like the scan repetition axis are unsharded), resolves
+logical names through the active `ShardingRules`, and *drops any mesh axis
+that does not divide the dim* (e.g. smollm's 15 heads on a 16-way model
+axis fall back to replicated; the MLP dim still shards). That keeps every
+(arch x mesh) combination lowerable without per-arch special cases.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import ShardingRules
+
+# (path regex, logical names right-aligned to the leaf's trailing dims)
+_PARAM_TABLE: list[tuple[str, tuple[Optional[str], ...]]] = [
+    (r"embed/table$", ("vocab", "embed_fsdp")),
+    (r"temporal/wq$", ("embed_fsdp", "heads", None)),
+    (r"(temporal|cross)/w[kv]$", ("embed_fsdp", "kv_heads", None)),
+    (r"cross/wq$", ("embed_fsdp", "heads", None)),
+    (r"(temporal|cross)/wo$", ("heads", None, "embed_fsdp")),
+    (r"moe/router$", ("embed_fsdp", None)),
+    (r"moe/w[iu]$", ("expert", "embed_fsdp", "expert_mlp")),
+    (r"moe/wo$", ("expert", "expert_mlp", "embed_fsdp")),
+    (r"dense/w[iu]$", ("embed_fsdp", "mlp")),
+    (r"dense/wo$", ("mlp", "embed_fsdp")),
+    (r"mlp/w[iu]$", ("embed_fsdp", "mlp")),
+    (r"mlp/wo$", ("mlp", "embed_fsdp")),
+    # rglru
+    (r"temporal/w[xyo]$", ("embed_fsdp", "mlp")),
+    (r"temporal/w_[ri]$", ("embed_fsdp", "mlp")),
+    (r"temporal/conv$", (None, "mlp")),
+    (r"temporal/(b_[ri]|lam)$", ("mlp",)),
+    # mlstm / slstm
+    (r"temporal/w_(up|gate|in)$", ("embed_fsdp", "mlp")),
+    (r"temporal/m[qkv]$", ("embed_fsdp", "mlp")),  # (di, di) in mlstm
+    (r"temporal/w_down$", ("mlp", "embed_fsdp")),
+    (r"temporal/w_if$", ("embed_fsdp", None)),
+    (r"temporal/w_rec$", (None, None, None)),
+    (r"temporal/b(_if)?$", (None,)),
+    # plain-mlp mixers in attention blocks (non-moe)
+    (r"w[iu]$", ("embed_fsdp", "mlp")),
+    (r"wo$", ("mlp", "embed_fsdp")),
+    (r"(norm|out_norm|final_norm)/scale$", (None,)),
+]
+
+_CACHE_TABLE: list[tuple[str, tuple[Optional[str], ...]]] = [
+    (r"temporal/[kv]$", ("cache_batch", "cache_seq", "act_kv_heads", None)),
+    (r"temporal/pos$", ()),
+    (r"cross_kv.*$", (None, "cache_batch", "cache_seq", "act_kv_heads",
+                      None)),
+    (r"temporal/h$", ("cache_batch", "mlp")),
+    (r"temporal/conv$", ("cache_batch", None, "mlp")),
+    (r"temporal/C$", ("cache_batch", None, None, None)),
+    (r"temporal/[nm]$", ("cache_batch", None, None)),
+    (r"temporal/c$", ("cache_batch", "mlp")),
+]
+
+
+def _resolve(names: tuple[Optional[str], ...], shape: tuple[int, ...],
+             rules: ShardingRules, mesh: Mesh) -> P:
+    """Right-align names to shape; drop axes that don't divide or that an
+    earlier dim already uses (e.g. MoE expert dim takes "data" in FSDP
+    mode, so embed_fsdp falls back to replicated for expert weights)."""
+    ndim = len(shape)
+    full = (None,) * (ndim - len(names)) + names
+    return _dedup_and_divide(full, shape, rules, mesh)
+
+
+def _dedup_and_divide(full, shape, rules, mesh) -> P:
+    out = []
+    used: set[str] = set()
+    for dim, name in zip(shape, full):
+        # `name` is a logical axis (resolve through rules), an already-
+        # resolved mesh axis (use as-is; the worker prefix arrives
+        # pre-resolved), or a tuple of mesh axes
+        if isinstance(name, str):
+            if name in rules:
+                axes = rules[name]
+            elif name in mesh.axis_names:
+                axes = name
+            else:
+                axes = None
+        else:
+            axes = name
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        if any(a in used for a in ax_tuple):
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+        if dim % size == 0:
+            out.append(axes)
+            used.update(ax_tuple)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def spec_for_path(path: str, shape: tuple[int, ...], rules: ShardingRules,
+                  mesh: Mesh, table: str = "param") -> P:
+    tbl = _PARAM_TABLE if table == "param" else _CACHE_TABLE
+    for pattern, names in tbl:
+        if re.search(pattern, path):
+            names = names[:len(shape)] if len(names) > len(shape) else names
+            return _resolve(names, shape, rules, mesh)
+    return P()  # replicate by default
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_shardings(tree, rules: ShardingRules, mesh: Mesh,
+                   table: str = "param", prefix_axes: int = 0,
+                   prefix_spec: Optional[tuple] = None):
+    """NamedSharding pytree matching `tree` (of ShapeDtypeStructs or
+    arrays). prefix_axes dims at the front get prefix_spec (worker dim)."""
+
+    def leaf(path, x):
+        spec = spec_for_path(_path_str(path), x.shape[prefix_axes:], rules,
+                             mesh, table)
+        if prefix_axes:
+            pre = prefix_spec if prefix_spec is not None else (None,) * prefix_axes
+            full = tuple(pre) + tuple(spec)
+            spec = _dedup_and_divide(full, x.shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)

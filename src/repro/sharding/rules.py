@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code names tensor dims with *logical* axes ("batch", "embed",
+"heads", "expert", ...). A `ShardingRules` table maps each logical axis to
+mesh axes (or None = replicated). Different deployment modes (pure-TP
+swarm, FSDP+TP time-multiplexed swarm, multi-pod) swap the table without
+touching model code. `shard(x, names)` applies a with_sharding_constraint
+when a mesh is active, and is a no-op otherwise (CPU tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, tuple[str, ...]]
+
+
+class ShardingRules(dict):
+    """logical axis name -> mesh axis (str), tuple of axes, or None."""
+
+    def spec(self, names: Sequence[Optional[str]]) -> P:
+        """Resolve logical names; a mesh axis already used by an earlier
+        dim is dropped from later dims (e.g. MoE expert dim takes "data"
+        in FSDP mode, so embed_fsdp inside expert weights replicates)."""
+        out = []
+        used: set[str] = set()
+        for n in names:
+            axes = self.get(n) if n is not None else None
+            if axes is None:
+                out.append(None)
+                continue
+            ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+            if any(a in used for a in ax_tuple):
+                out.append(None)
+            else:
+                out.append(axes)
+                used.update(ax_tuple)
+        return P(*out)
+
+
+# --- canonical rule tables -------------------------------------------------
+# worker: the swarm dim (spatial workers). batch: per-worker batch.
+# embed_fsdp: the FSDP dim of weights (row dim) when FSDP is on.
+
+UNSHARDED = ShardingRules()
+
+SINGLE_POD_TP = ShardingRules(
+    worker="data", batch=None, seq=None,
+    embed=None, embed_fsdp=None,
+    heads="model", kv_heads="model", q_per_kv=None, head_dim=None,
+    act_heads="model", act_kv_heads="model", residual_seq="model",
+    mlp="model", vocab="model",
+    expert="model", expert_mlp=None,
+    cache_batch=None, cache_seq=None,
+)
+
+SINGLE_POD_FSDP_TP = ShardingRules(
+    worker=None, batch="data", seq=None,
+    embed=None, embed_fsdp="data",
+    heads="model", kv_heads="model", q_per_kv=None, head_dim=None,
+    act_heads="model", act_kv_heads="model", residual_seq="model",
+    moe_ep=True,
+    mlp="model", vocab="model",
+    expert="data", expert_mlp="model",
+    cache_batch="data", cache_seq=None,
+)
+
+MULTI_POD_TP = ShardingRules(
+    worker=("pod", "data"), batch=None, seq=None,
+    embed=None, embed_fsdp=None,
+    heads="model", kv_heads="model", q_per_kv=None, head_dim=None,
+    act_heads="model", act_kv_heads="model", residual_seq="model",
+    mlp="model", vocab="model",
+    expert="model", expert_mlp=None,
+    cache_batch=None, cache_seq=None,
+)
+
+MULTI_POD_FSDP_TP = ShardingRules(
+    worker="pod", batch="data", seq=None,
+    embed=None, embed_fsdp="data",
+    heads="model", kv_heads="model", q_per_kv=None, head_dim=None,
+    act_heads="model", act_kv_heads="model", residual_seq="model",
+    mlp="model", vocab="model",
+    expert="data", expert_mlp="model",
+    cache_batch="data", cache_seq=None,
+)
+
+# serving rules are derived by the launcher (batch over data, cache over
+# data; long-context: cache_seq over data) — see launch/shardings.py.
+
+_state = threading.local()
+
+
+def set_rules(rules: Optional[ShardingRules], mesh: Optional[Mesh]) -> None:
+    _state.rules = rules
+    _state.mesh = mesh
+
+
+def get_rules() -> tuple[Optional[ShardingRules], Optional[Mesh]]:
+    return getattr(_state, "rules", None), getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules], mesh: Optional[Mesh]):
+    prev = get_rules()
+    set_rules(rules, mesh)
+    try:
+        yield
+    finally:
+        set_rules(*prev)
+
+
+def logical_to_spec(names: Sequence[Optional[str]]) -> Optional[P]:
+    rules, _ = get_rules()
+    if rules is None:
+        return None
+    return rules.spec(names)
+
+
+def shard(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint if rules+mesh are active, else no-op."""
+    rules, mesh = get_rules()
+    if rules is None or mesh is None:
+        return x
+    spec = rules.spec(names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

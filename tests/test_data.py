@@ -1,0 +1,86 @@
+"""Data pipeline invariants: partition shapes, Dirichlet skew behaviour,
+determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import noniid
+from repro.data import partition, synthetic
+
+SPEC = synthetic.MNIST_LIKE
+
+
+def test_partition_shapes():
+    d = partition.dirichlet_partition(jax.random.PRNGKey(0), 6, 0.5, SPEC,
+                                      n_local=64, n_global=128, n_test=32)
+    assert d.x.shape == (6, 64, SPEC.height, SPEC.width, SPEC.channels)
+    assert d.y.shape == (6, 64)
+    assert d.global_x.shape[0] == 128 and d.test_x.shape[0] == 32
+    assert int(d.y.max()) < SPEC.num_classes and int(d.y.min()) >= 0
+
+
+def test_small_alpha_concentrates_labels():
+    """alpha=0.05 workers see far fewer distinct labels than alpha=100."""
+    k = jax.random.PRNGKey(0)
+    def mean_distinct(alpha):
+        d = partition.dirichlet_partition(k, 12, alpha, SPEC, n_local=256,
+                                          n_global=64, n_test=16)
+        return np.mean([len(np.unique(np.asarray(d.y[i])))
+                        for i in range(12)])
+    assert mean_distinct(0.05) < mean_distinct(100.0) - 3
+
+
+def test_eta_tracks_alpha():
+    """Mean non-iid degree decreases as alpha grows (metric validity —
+    the Fig. 1 trend)."""
+    k = jax.random.PRNGKey(1)
+    means = []
+    for alpha in (0.05, 0.5, 5.0, 50.0):
+        d = partition.dirichlet_partition(k, 16, alpha, SPEC, n_local=256,
+                                          n_global=512, n_test=16)
+        ratios, wds = [], []
+        for i in range(16):
+            r, w = noniid.noniid_features(d.y[i], d.global_y,
+                                          SPEC.num_classes)
+            ratios.append(float(r))
+            wds.append(float(w))
+        # raw heterogeneity features: low ratio / high WD at small alpha
+        means.append((np.mean(ratios), np.mean(wds)))
+    ratios_m = [m[0] for m in means]
+    wds_m = [m[1] for m in means]
+    assert ratios_m == sorted(ratios_m), ratios_m          # increasing
+    assert wds_m == sorted(wds_m, reverse=True), wds_m     # decreasing
+
+
+def test_mixed_partition_case2_groups():
+    groups = [(4, 0.1), (3, 0.5), (2, 1.0), (1, 10.0)]
+    d = partition.mixed_dirichlet_partition(jax.random.PRNGKey(2), groups,
+                                            SPEC, n_local=64, n_global=64,
+                                            n_test=16)
+    assert d.x.shape[0] == 10
+    assert np.allclose(np.asarray(d.alphas[:4]), 0.1)
+    assert float(d.alphas[-1]) == 10.0
+
+
+def test_determinism():
+    a = partition.dirichlet_partition(jax.random.PRNGKey(3), 4, 0.5, SPEC,
+                                      n_local=32, n_global=32, n_test=16)
+    b = partition.dirichlet_partition(jax.random.PRNGKey(3), 4, 0.5, SPEC,
+                                      n_local=32, n_global=32, n_test=16)
+    np.testing.assert_array_equal(np.asarray(a.x), np.asarray(b.x))
+    np.testing.assert_array_equal(np.asarray(a.y), np.asarray(b.y))
+
+
+def test_classes_are_learnable():
+    """A linear probe on i.i.d. synthetic data beats chance easily."""
+    d = partition.iid_partition(jax.random.PRNGKey(4), 2, SPEC,
+                                n_local=512, n_global=512, n_test=512)
+    x = d.global_x.reshape(512, -1)
+    y = d.global_y
+    # closed-form ridge regression to one-hot targets
+    oh = jax.nn.one_hot(y, SPEC.num_classes)
+    w = jnp.linalg.solve(x.T @ x + 10.0 * jnp.eye(x.shape[1]), x.T @ oh)
+    pred = jnp.argmax(d.test_x.reshape(512, -1) @ w, axis=-1)
+    acc = float((pred == d.test_y).mean())
+    assert acc > 0.5, acc

@@ -1,0 +1,112 @@
+"""Validation of the while-multiplicity-aware HLO cost model against
+XLA's own cost_analysis on controlled programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_costmodel
+
+
+def lower_text(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return compiled.as_text(), compiled.cost_analysis()
+
+
+class TestDotFlops:
+    def test_plain_matmul(self):
+        x = jnp.ones((64, 128))
+        w = jnp.ones((128, 32))
+        text, cost = lower_text(lambda x, w: x @ w, x, w)
+        rec = hlo_costmodel.analyze(text)
+        # XLA counts FMA as 1 flop -> cost_analysis = N*M*K; ours = 2NMK
+        assert rec["flops"] == 2 * 64 * 128 * 32
+
+    def test_batched_matmul(self):
+        x = jnp.ones((4, 16, 32))
+        w = jnp.ones((4, 32, 8))
+        text, _ = lower_text(lambda x, w: jnp.einsum("bik,bkj->bij", x, w),
+                             x, w)
+        rec = hlo_costmodel.analyze(text)
+        assert rec["flops"] == 2 * 4 * 16 * 32 * 8
+
+
+class TestWhileMultiplicity:
+    @pytest.mark.parametrize("trips", [4, 8, 17])
+    def test_scan_counts_trip_times(self, trips):
+        x = jnp.ones((32, 64))
+        ws = jnp.ones((trips, 64, 64))
+
+        def scanned(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+
+        text, cost = lower_text(scanned, x, ws)
+        rec = hlo_costmodel.analyze(text)
+        per_trip = 2 * 32 * 64 * 64
+        # the scan dot must be counted `trips` times (allow fori fusion
+        # noise of one extra body)
+        assert rec["flops"] >= trips * per_trip
+        assert rec["flops"] <= (trips + 1) * per_trip
+        assert rec["max_while_trip"] >= trips
+        # and XLA's own count misses the multiplicity (counts body once):
+        xla_flops = float(cost.get("flops", 0.0))
+        assert xla_flops * 2 < rec["flops"] * (2 / trips) * 1.5
+
+    def test_scan_matches_unrolled(self):
+        trips = 6
+        x = jnp.ones((16, 32))
+        ws = jnp.ones((trips, 32, 32))
+
+        def scanned(x, ws):
+            def body(c, w):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+
+        def unrolled(x, ws):
+            for i in range(trips):
+                x = x @ ws[i]
+            return x.sum()
+
+        t1, _ = lower_text(scanned, x, ws)
+        t2, _ = lower_text(unrolled, x, ws)
+        f1 = hlo_costmodel.analyze(t1)["flops"]
+        f2 = hlo_costmodel.analyze(t2)["flops"]
+        assert f2 == trips * 2 * 16 * 32 * 32
+        assert abs(f1 - f2) <= 2 * 16 * 32 * 32  # <= one extra body
+
+
+class TestHbmBytes:
+    def test_traffic_scales_with_while(self):
+        x = jnp.ones((128, 128))
+
+        def loop(x, n):
+            def body(_, c):
+                return jnp.tanh(c * 1.5)
+            return jax.lax.fori_loop(0, n, body, x)
+
+        t4, _ = lower_text(lambda x: loop(x, 4), x)
+        t16, _ = lower_text(lambda x: loop(x, 16), x)
+        b4 = hlo_costmodel.analyze(t4)["hbm_bytes"]
+        b16 = hlo_costmodel.analyze(t16)["hbm_bytes"]
+        assert b16 > 2 * b4  # traffic grows with trip count
+
+
+class TestParser:
+    def test_parses_real_dryrun_artifact(self):
+        import gzip
+        from pathlib import Path
+        p = Path(__file__).parents[1] / "artifacts" / "dryrun"
+        hlos = sorted(p.glob("smollm-360m__train_4k__single.hlo.gz"))
+        if not hlos:
+            pytest.skip("dry-run artifacts not present")
+        text = gzip.open(hlos[0], "rt").read()
+        rec = hlo_costmodel.analyze(text)
+        assert rec["flops"] > 0
+        assert rec["collectives"]["total_bytes"] > 0
+        # 8 scanned layer-groups (32 layers / 4-layer groups): the layer
+        # while loop must be found
+        assert rec["max_while_trip"] >= 4

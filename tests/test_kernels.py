@@ -1,0 +1,137 @@
+"""Per-kernel validation: pallas_call (interpret=True on CPU) vs the
+pure-jnp ref.py oracle, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.pso_update import pso_update, pso_update_ref
+from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Sk,H,K,hd", [
+        (2, 128, 128, 4, 2, 64),
+        (1, 256, 256, 4, 4, 32),
+        (2, 100, 100, 3, 1, 64),    # unpadded + MQA + odd heads
+        (1, 64, 256, 2, 2, 128),    # chunked-prefill suffix alignment
+        (1, 512, 512, 2, 1, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, B, Sq, Sk, H, K, hd, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+        k = jax.random.normal(ks[1], (B, Sk, K, hd), dtype)
+        v = jax.random.normal(ks[2], (B, Sk, K, hd), dtype)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        g = H // K
+        kr = jnp.repeat(k.transpose(0, 2, 1, 3), g, 1).reshape(B * H, Sk, hd)
+        vr = jnp.repeat(v.transpose(0, 2, 1, 3), g, 1).reshape(B * H, Sk, hd)
+        qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+        ref = attention_ref(qr, kr, vr, causal=True, q_offset=Sk - Sq)
+        ref = ref.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("window", [16, 64, 200])
+    def test_sliding_window(self, window):
+        B, S, H, hd = 1, 256, 2, 64
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, H, hd))
+        v = jax.random.normal(ks[2], (B, S, H, hd))
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        kr = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        vr = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        ref = attention_ref(qr, kr, vr, causal=True, window=window)
+        ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_block_shape_sweep(self):
+        """Different BlockSpec tilings give identical results."""
+        B, S, H, hd = 1, 256, 2, 64
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, H, hd))
+        v = jax.random.normal(ks[2], (B, S, H, hd))
+        outs = [flash_attention(q, k, v, causal=True, block_q=bq,
+                                block_k=bk, interpret=True)
+                for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+class TestRglruScan:
+    @pytest.mark.parametrize("B,S,D", [(2, 256, 128), (1, 100, 128),
+                                       (3, 512, 256), (1, 7, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, S, D, dtype):
+        ks = jax.random.split(KEY, 3)
+        a = jax.random.uniform(ks[0], (B, S, D), minval=0.5,
+                               maxval=0.999).astype(dtype)
+        b = (0.1 * jax.random.normal(ks[1], (B, S, D))).astype(dtype)
+        h0 = jax.random.normal(ks[2], (B, D)).astype(dtype)
+        out, fin = rglru_scan(h0, a, b, interpret=True)
+        ref = rglru_scan_ref(h0, a, b)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(out, ref, atol=tol, rtol=tol)
+        np.testing.assert_allclose(fin, ref[:, -1], atol=tol, rtol=tol)
+
+    def test_block_size_invariance(self):
+        B, S, D = 2, 384, 128
+        ks = jax.random.split(KEY, 3)
+        a = jax.random.uniform(ks[0], (B, S, D), minval=0.8, maxval=0.99)
+        b = 0.1 * jax.random.normal(ks[1], (B, S, D))
+        h0 = jax.random.normal(ks[2], (B, D))
+        outs = [rglru_scan(h0, a, b, block_s=bs, interpret=True)[0]
+                for bs in (64, 128, 384)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-6)
+
+
+class TestPsoUpdateKernel:
+    @pytest.mark.parametrize("shapes", [
+        [(100,)], [(1000,), (37, 13)], [(8, 128), (5,), (3, 3, 3)],
+        [(256 * 128 + 1,)],  # crosses the block boundary
+    ])
+    @pytest.mark.parametrize("clip", [0.0, 0.5])
+    def test_matches_ref(self, shapes, clip):
+        ks = jax.random.split(KEY, 5 * len(shapes))
+        mk = lambda i: {f"p{j}": jax.random.normal(ks[i * len(shapes) + j],
+                                                   s)
+                        for j, s in enumerate(shapes)}
+        w, v, wl, wg, d = mk(0), mk(1), mk(2), mk(3), mk(4)
+        w2, v2 = pso_update(w, v, wl, wg, d, 0.7, 0.2, -0.4, clip=clip,
+                            interpret=True)
+        coefs = jnp.array([0.7, 0.2, -0.4, clip])
+        for key in w:
+            wr, vr = pso_update_ref(coefs, w[key], v[key], wl[key],
+                                    wg[key], d[key])
+            np.testing.assert_allclose(w2[key], wr, atol=1e-6, rtol=1e-5)
+            np.testing.assert_allclose(v2[key], vr, atol=1e-6, rtol=1e-5)
+
+    def test_semantics_match_core_pso(self):
+        """Kernel == core/pso.py pso_step wiring (delta = -lr*grad)."""
+        from repro.core import pso
+        from repro.core.pso import PsoCoefficients
+        params = {"w": jax.random.normal(KEY, (50,))}
+        st = pso.init_worker_state(params)
+        st = st._replace(velocity={"w": jnp.ones((50,)) * 0.1},
+                         best_params={"w": params["w"] + 0.3})
+        gbest = {"w": params["w"] - 0.2}
+        grads = {"w": jnp.full((50,), 0.5)}
+        coeffs = PsoCoefficients(*(jnp.asarray(x) for x in (0.6, 0.1, 0.2)))
+        lr = jnp.asarray(0.05)
+        out = pso.pso_step(st, gbest, grads, coeffs, lr)
+        delta = {"w": -lr * grads["w"]}
+        w2, v2 = pso_update(st.params, st.velocity, st.best_params, gbest,
+                            delta, 0.6, 0.1, 0.2, interpret=True)
+        np.testing.assert_allclose(w2["w"], out.params["w"], rtol=1e-5)
+        np.testing.assert_allclose(v2["w"], out.velocity["w"], rtol=1e-5)

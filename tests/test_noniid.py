@@ -1,0 +1,87 @@
+"""Unit + property tests for the non-i.i.d. degree metric (paper §II)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import noniid
+
+
+def _rand_dist(rng, L):
+    p = rng.random(L) + 1e-6
+    return p / p.sum()
+
+
+class TestWasserstein:
+    def test_identical_is_zero(self):
+        p = jnp.array([0.2, 0.3, 0.5])
+        assert float(noniid.wasserstein_1d(p, p)) == pytest.approx(0.0)
+
+    def test_disjoint_extremes(self):
+        # all mass at 0 vs all mass at L-1: W1 = L-1
+        L = 10
+        p = jnp.zeros(L).at[0].set(1.0)
+        q = jnp.zeros(L).at[L - 1].set(1.0)
+        assert float(noniid.wasserstein_1d(p, q)) == pytest.approx(L - 1)
+
+    @hp.given(st.integers(2, 12), st.integers(0, 2**31 - 1))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_symmetry_and_nonneg(self, L, seed):
+        rng = np.random.default_rng(seed)
+        p, q = jnp.array(_rand_dist(rng, L)), jnp.array(_rand_dist(rng, L))
+        w_pq = float(noniid.wasserstein_1d(p, q))
+        w_qp = float(noniid.wasserstein_1d(q, p))
+        assert w_pq >= 0
+        assert w_pq == pytest.approx(w_qp, abs=1e-5)
+
+    @hp.given(st.integers(2, 10), st.integers(0, 2**31 - 1),
+              st.integers(0, 2**31 - 1))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_triangle_inequality(self, L, s1, s2):
+        rng1, rng2 = np.random.default_rng(s1), np.random.default_rng(s2)
+        p = jnp.array(_rand_dist(rng1, L))
+        q = jnp.array(_rand_dist(rng2, L))
+        r = jnp.full((L,), 1.0 / L)
+        w = lambda a, b: float(noniid.wasserstein_1d(a, b))
+        assert w(p, q) <= w(p, r) + w(r, q) + 1e-5
+
+
+class TestEta:
+    def test_normalized_range(self):
+        key = jax.random.PRNGKey(0)
+        labels = jax.random.randint(key, (8, 64), 0, 10)
+        glabels = jax.random.randint(key, (256,), 0, 10)
+        eta = noniid.noniid_degree_from_labels(labels, glabels, 10)
+        assert eta.shape == (8,)
+        assert float(eta.min()) == pytest.approx(0.0, abs=1e-6)
+        assert float(eta.max()) == pytest.approx(1.0, abs=1e-6)
+
+    def test_label_ratio(self):
+        local = jnp.array([5.0, 0.0, 3.0, 0.0])
+        glob = jnp.array([10.0, 10.0, 10.0, 10.0])
+        assert float(noniid.label_ratio(local, glob)) == pytest.approx(0.5)
+
+    def test_skewed_worker_has_larger_wd(self):
+        """A one-class worker is farther from uniform than a uniform one."""
+        g = jax.random.randint(jax.random.PRNGKey(1), (1000,), 0, 10)
+        uniform_worker = jax.random.randint(jax.random.PRNGKey(2), (512,), 0, 10)
+        skewed_worker = jnp.zeros((512,), jnp.int32)
+        _, wd_u = noniid.noniid_features(uniform_worker, g, 10)
+        _, wd_s = noniid.noniid_features(skewed_worker, g, 10)
+        assert float(wd_s) > float(wd_u)
+
+
+class TestFit:
+    def test_recovers_linear_coefficients(self):
+        rng = np.random.default_rng(0)
+        n = 200
+        ratios = rng.random(n)
+        wds = rng.random(n) * 3
+        acc = 0.4 * ratios - 0.1 * wds + 0.3 + rng.normal(0, 1e-3, n)
+        coeffs, r2_tr, r2_te = noniid.fit_eta_coefficients(ratios, wds, acc)
+        assert coeffs.beta1 == pytest.approx(0.4, abs=0.01)
+        assert coeffs.beta2 == pytest.approx(-0.1, abs=0.01)
+        assert coeffs.phi == pytest.approx(0.3, abs=0.01)
+        assert r2_tr > 0.99 and r2_te > 0.99

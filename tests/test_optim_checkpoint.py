@@ -1,0 +1,125 @@
+"""Unit + property tests for the optim/ and checkpoint/ substrates."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.optim import schedules
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_problem(dim=8):
+    """Convex quadratic: loss(p) = ||p - target||^2."""
+    target = jax.random.normal(KEY, (dim,))
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    p0 = {"w": jnp.zeros(dim)}
+    return loss, p0, target
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("make", [
+        lambda: optim.sgd(0.1),
+        lambda: optim.momentum_sgd(0.05, beta=0.9),
+        lambda: optim.momentum_sgd(0.05, beta=0.9, nesterov=True),
+        lambda: optim.adamw(0.1),
+    ])
+    def test_converges_on_quadratic(self, make):
+        loss, p, target = quad_problem()
+        opt = make()
+        state = opt.init(p)
+        for step in range(200):
+            g = jax.grad(loss)(p)
+            upd, state = opt.update(g, state, p, step)
+            p = optim.apply_updates(p, upd)
+        assert float(loss(p)) < 1e-2
+
+    def test_weight_decay_shrinks(self):
+        opt = optim.sgd(0.1, weight_decay=0.5)
+        p = {"w": jnp.ones(4)}
+        upd, _ = opt.update({"w": jnp.zeros(4)}, opt.init(p), p, 0)
+        assert np.all(np.asarray(upd["w"]) < 0)
+
+    def test_pso_hybrid_interface(self):
+        loss, p, target = quad_problem()
+        opt = optim.pso_hybrid(0.05, velocity_clip=1.0)
+        state = opt.init(p)
+        # seed the swarm attractors at the optimum: PSO pull + gradient
+        # must make clear progress (the per-step N(0,1) cognitive/social
+        # coefficients keep the iterate jittering around the optimum, so
+        # assert improvement rather than convergence)
+        state = state._replace(best_params={"w": target},
+                               gbest_params={"w": target})
+        l0 = float(loss(p))
+        for step in range(300):
+            g = jax.grad(loss)(p)
+            upd, state = opt.update(g, state, p, step)
+            p = optim.apply_updates(p, upd)
+        assert float(loss(p)) < 0.5 * l0
+
+    def test_clip_by_global_norm(self):
+        t = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+        c = optim.clip_by_global_norm(t, 1.0)
+        assert float(optim.global_norm(c)) <= 1.0 + 1e-5
+
+    @hp.given(st.floats(1e-4, 1.0), st.integers(1, 50))
+    @hp.settings(max_examples=20, deadline=None)
+    def test_step_decay_monotone(self, lr, every):
+        sched = schedules.step_decay(lr, gamma=0.5, every=every)
+        vals = [float(sched(jnp.asarray(s))) for s in range(0, 120, 7)]
+        assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+        assert abs(vals[0] - lr) < 1e-6 * max(lr, 1.0)  # f32 schedule
+
+    def test_warmup_cosine_shape(self):
+        sched = schedules.warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+        assert float(sched(jnp.asarray(0))) == 0.0
+        assert abs(float(sched(jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(sched(jnp.asarray(100))) < 0.2
+
+
+class TestCheckpoint:
+    def test_roundtrip_nested(self, tmp_path):
+        tree = {"layer": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                          "b": np.zeros(3, np.float32)},
+                "step": np.asarray(7)}
+        p = tmp_path / "ck.npz"
+        save_pytree(p, tree, metadata={"note": "x"})
+        back = restore_pytree(p)
+        np.testing.assert_array_equal(back["layer"]["w"], tree["layer"]["w"])
+        np.testing.assert_array_equal(back["step"], 7)
+
+    def test_restore_into_template_casts(self, tmp_path):
+        tree = {"w": jnp.ones((4,), jnp.float32)}
+        p = tmp_path / "ck.npz"
+        save_pytree(p, tree)
+        tmpl = {"w": jnp.zeros((4,), jnp.bfloat16)}
+        back = restore_pytree(p, like=tmpl)
+        assert back["w"].dtype == jnp.bfloat16
+
+    def test_template_mismatch_raises(self, tmp_path):
+        save_pytree(tmp_path / "ck.npz", {"w": jnp.ones(3)})
+        with pytest.raises(ValueError):
+            restore_pytree(tmp_path / "ck.npz", like={"other": jnp.ones(3)})
+
+    def test_manager_retention_and_latest(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, max_to_keep=2)
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, {"w": jnp.full((2,), float(s))})
+        assert mgr.all_steps() == [3, 4]
+        step, tree = mgr.restore()
+        assert step == 4
+        np.testing.assert_allclose(tree["w"], 4.0)
+
+    @hp.given(st.lists(st.integers(1, 40), min_size=1, max_size=6,
+                       unique=True))
+    @hp.settings(max_examples=10, deadline=None)
+    def test_manager_keeps_newest(self, tmp_path_factory, steps):
+        tmp = tmp_path_factory.mktemp("ck")
+        mgr = CheckpointManager(tmp, max_to_keep=3)
+        for s in sorted(steps):
+            mgr.save(s, {"w": jnp.zeros(1)})
+        assert mgr.all_steps() == sorted(steps)[-3:]

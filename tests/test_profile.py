@@ -1,0 +1,52 @@
+"""The attribution profiler: multiplicities and term attribution."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_costmodel, profile
+
+
+def test_multiplicities_weight_scan_bodies():
+    x = jnp.ones((32, 64))
+    ws = jnp.ones((5, 64, 64))
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    text = jax.jit(scanned).lower(x, ws).compile().as_text()
+    comps, entry = hlo_costmodel.parse_hlo(text)
+    mult = profile.computation_multiplicities(comps, entry)
+    assert max(mult.values()) >= 5  # the scan body runs 5x
+
+
+@pytest.mark.parametrize("term", ["memory", "flops"])
+def test_attribution_sums_match_analyze(term):
+    x = jnp.ones((16, 32))
+    ws = jnp.ones((3, 32, 32))
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    text = jax.jit(f).lower(x, ws).compile().as_text()
+    rows = profile.attribute(text, term)
+    total = sum(v for v, _, _ in rows)
+    rec = hlo_costmodel.analyze(text)
+    ref = rec["flops"] if term == "flops" else rec["hbm_bytes"]
+    assert total == pytest.approx(ref, rel=1e-6)
+
+
+def test_dry_run_artifact_attribution():
+    import gzip
+    from pathlib import Path
+    p = Path(__file__).parents[1] / "artifacts" / "dryrun" / \
+        "smollm-360m__train_4k__single.hlo.gz"
+    if not p.exists():
+        pytest.skip("dry-run artifacts not present")
+    rows = profile.attribute(gzip.open(p, "rt").read(), "collective")
+    assert rows and rows[0][0] > 0

@@ -1,0 +1,103 @@
+"""Eq. 5-10 semantics: PSO update, local/global bests, selection rule,
+Eq.-7 aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pso, selection
+from repro.core.pso import PsoCoefficients, PsoHyperParams
+
+
+def tiny_params(seed=0, n=7):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (n,)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (3, 2))}
+
+
+class TestPsoStep:
+    def test_matches_manual_eq8(self):
+        p = tiny_params()
+        st = pso.init_worker_state(p)
+        gbest = jax.tree.map(lambda x: x + 1.0, p)
+        grads = jax.tree.map(jnp.ones_like, p)
+        coeffs = PsoCoefficients(c0=jnp.asarray(0.5), c1=jnp.asarray(0.2),
+                                 c2=jnp.asarray(-0.3), )
+        lr = jnp.asarray(0.1)
+        new = pso.pso_step(st, gbest, grads, coeffs, lr)
+        # v0 = 0, wl = w  =>  v' = c2*(wg - w) - lr*g
+        for key in ("w",):
+            expect = 0.5 * 0.0 + 0.2 * 0.0 + (-0.3) * 1.0 - 0.1 * 1.0
+            np.testing.assert_allclose(new.velocity[key],
+                                       jnp.full_like(p[key], expect),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(new.params[key], p[key] + expect,
+                                       rtol=1e-6)
+
+    def test_velocity_clip(self):
+        p = tiny_params()
+        st = pso.init_worker_state(p)
+        gbest = jax.tree.map(lambda x: x + 100.0, p)
+        grads = jax.tree.map(jnp.zeros_like, p)
+        coeffs = PsoCoefficients(*(jnp.asarray(v) for v in (0.0, 0.0, 1.0)))
+        hp = PsoHyperParams(velocity_clip=0.5)
+        new = pso.pso_step(st, gbest, grads, coeffs, jnp.asarray(0.1), hp)
+        assert float(jnp.abs(new.velocity["w"]).max()) <= 0.5 + 1e-6
+
+
+class TestBests:
+    def test_local_best_improves_only(self):
+        st = pso.init_worker_state(tiny_params())
+        st = pso.update_local_best(st, jnp.asarray(1.0))
+        assert float(st.best_loss) == 1.0
+        moved = st._replace(params=jax.tree.map(lambda x: x + 1, st.params))
+        worse = pso.update_local_best(moved, jnp.asarray(2.0))
+        assert float(worse.best_loss) == 1.0  # kept old best
+        np.testing.assert_allclose(worse.best_params["w"], st.params["w"])
+        better = pso.update_local_best(moved, jnp.asarray(0.5))
+        assert float(better.best_loss) == 0.5
+        np.testing.assert_allclose(better.best_params["w"],
+                                   moved.params["w"])
+
+    def test_global_best_eq10(self):
+        g = pso.init_global_best(tiny_params())
+        g = pso.update_global_best(g, tiny_params(1), jnp.asarray(3.0))
+        g2 = pso.update_global_best(g, tiny_params(2), jnp.asarray(5.0))
+        np.testing.assert_allclose(g2.params["w"], tiny_params(1)["w"])
+        g3 = pso.update_global_best(g2, tiny_params(3), jnp.asarray(1.0))
+        np.testing.assert_allclose(g3.params["w"], tiny_params(3)["w"])
+
+
+class TestSelection:
+    def test_threshold_rule_eq6(self):
+        st = selection.SelectionState(prev_theta_mean=jnp.asarray(1.0))
+        theta = jnp.array([0.5, 1.0, 1.5, 0.9])
+        mask, nxt = selection.select_workers(theta, st)
+        np.testing.assert_array_equal(mask, [1, 1, 0, 1])
+        assert float(nxt.prev_theta_mean) == pytest.approx(float(theta.mean()))
+
+    def test_round0_selects_all(self):
+        st = selection.init_selection_state()
+        theta = jnp.array([10.0, 20.0, 30.0])
+        mask, _ = selection.select_workers(theta, st)
+        assert float(mask.sum()) == 3
+
+    def test_fallback_selects_best(self):
+        st = selection.SelectionState(prev_theta_mean=jnp.asarray(0.0))
+        theta = jnp.array([2.0, 1.0, 3.0])
+        mask, _ = selection.select_workers(theta, st)
+        np.testing.assert_array_equal(mask, [0, 1, 0])
+
+    def test_aggregation_eq7(self):
+        C = 4
+        g = {"w": jnp.zeros((3,))}
+        prev = {"w": jnp.zeros((C, 3))}
+        new = {"w": jnp.arange(C * 3, dtype=jnp.float32).reshape(C, 3)}
+        mask = jnp.array([1.0, 0.0, 1.0, 0.0])
+        out = selection.aggregate_global(g, new, prev, mask)
+        expect = (new["w"][0] + new["w"][2]) / 2
+        np.testing.assert_allclose(out["w"], expect)
+
+    def test_comm_cost(self):
+        mask = jnp.array([1.0, 0.0, 1.0])
+        assert float(selection.uploaded_parameter_count(mask, 100)) == 200

@@ -1,0 +1,89 @@
+"""Property tests (hypothesis) for the selection/aggregation invariants
+of §III-C — the system-level contracts the mesh step relies on."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selection
+from repro.core.selection import SelectionState
+
+finite = st.floats(min_value=0.0, max_value=10.0, allow_nan=False)
+
+
+class TestSelectionRule:
+    @hp.given(st.lists(finite, min_size=2, max_size=20))
+    @hp.settings(max_examples=40, deadline=None)
+    def test_at_least_one_selected(self, thetas):
+        theta = jnp.asarray(thetas, jnp.float32)
+        mask, _ = selection.select_workers(
+            theta, SelectionState(jnp.asarray(-1.0)))  # impossible bar
+        assert float(mask.sum()) >= 1.0
+
+    @hp.given(st.lists(finite, min_size=2, max_size=20), finite)
+    @hp.settings(max_examples=40, deadline=None)
+    def test_threshold_semantics(self, thetas, bar):
+        theta = jnp.asarray(thetas, jnp.float32)
+        mask, nxt = selection.select_workers(
+            theta, SelectionState(jnp.asarray(bar, jnp.float32)))
+        below = np.asarray(theta) <= bar
+        if below.any():  # Eq. 6 exactly when non-degenerate
+            np.testing.assert_array_equal(np.asarray(mask) > 0, below)
+        # next threshold is this round's mean (Eq. 6's bar update)
+        assert abs(float(nxt.prev_theta_mean) - float(theta.mean())) < 1e-5
+
+    @hp.given(st.lists(finite, min_size=2, max_size=20))
+    @hp.settings(max_examples=20, deadline=None)
+    def test_round0_selects_all(self, thetas):
+        theta = jnp.asarray(thetas, jnp.float32)
+        mask, _ = selection.select_workers(
+            theta, selection.init_selection_state())
+        assert float(mask.sum()) == len(thetas)
+
+
+class TestAggregation:
+    def _tree(self, key, C, dim=5):
+        k1, k2, k3 = jax.random.split(key, 3)
+        g = {"w": jax.random.normal(k1, (dim,))}
+        new = {"w": jax.random.normal(k2, (C, dim))}
+        prev = {"w": jax.random.normal(k3, (C, dim))}
+        return g, new, prev
+
+    @hp.given(st.integers(2, 12), st.integers(0, 2 ** 12 - 1))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_all_selected_equals_mean_delta(self, C, seed):
+        g, new, prev = self._tree(jax.random.PRNGKey(seed), C)
+        mask = jnp.ones((C,))
+        out = selection.aggregate_global(g, new, prev, mask)
+        expect = g["w"] + (new["w"] - prev["w"]).mean(axis=0)
+        np.testing.assert_allclose(out["w"], expect, rtol=2e-5, atol=2e-6)
+
+    @hp.given(st.integers(2, 12), st.integers(0, 11), st.integers(0, 99))
+    @hp.settings(max_examples=30, deadline=None)
+    def test_single_selected_is_that_delta(self, C, pick, seed):
+        pick = pick % C
+        g, new, prev = self._tree(jax.random.PRNGKey(seed), C)
+        mask = jnp.zeros((C,)).at[pick].set(1.0)
+        out = selection.aggregate_global(g, new, prev, mask)
+        expect = g["w"] + (new["w"][pick] - prev["w"][pick])
+        np.testing.assert_allclose(out["w"], expect, rtol=2e-5, atol=2e-6)
+
+    @hp.given(st.integers(2, 10), st.integers(0, 99))
+    @hp.settings(max_examples=20, deadline=None)
+    def test_zero_delta_is_fixed_point(self, C, seed):
+        g, new, _ = self._tree(jax.random.PRNGKey(seed), C)
+        mask = jnp.ones((C,))
+        out = selection.aggregate_global(g, new, new, mask)
+        np.testing.assert_allclose(out["w"], g["w"], rtol=1e-6)
+
+    @hp.given(st.integers(2, 10), st.integers(0, 99))
+    @hp.settings(max_examples=20, deadline=None)
+    def test_comm_accounting(self, C, seed):
+        """§IV-C: uploads = n * sum(s_i) <= n * C (FedAvg)."""
+        mask = (jax.random.uniform(jax.random.PRNGKey(seed), (C,))
+                > 0.5).astype(jnp.float32)
+        n = 1234
+        up = selection.uploaded_parameter_count(mask, n)
+        assert float(up) == float(mask.sum()) * n
+        assert float(up) <= n * C
