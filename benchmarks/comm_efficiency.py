@@ -1,14 +1,24 @@
-"""Paper §IV-C: communication efficiency.
+"""Paper §IV-C: communication efficiency, in bytes on the wire.
 
-FedAvg uploads n*C parameters per round; M-DSL uploads n*sum_i s_{i,t}.
-The paper claims a small subset of workers represents the fleet after the
-early training stage, and M-DSL converges in fewer rounds. This benchmark
-measures uploaded parameters per round and rounds-to-target-accuracy.
+FedAvg uploads C dense models per round; M-DSL uploads only the Eq.-6
+selected subset — and with `repro.comm` the payload itself shrinks
+(top-k / int8 / int4 with error feedback). This benchmark sweeps
+algorithms x compressors and reports accuracy-vs-bytes trade-off
+curves: total uplink bytes, rounds-to-target-accuracy, and the byte
+cost of reaching the target.
 """
 from __future__ import annotations
 
 from benchmarks.common import print_table, save_record
+from repro.comm import CommConfig
 from repro.launch.train import run_paper_experiment
+
+SWEEP = [
+    ("identity", CommConfig()),
+    ("topk5%", CommConfig(compressor="topk", topk_ratio=0.05)),
+    ("int8", CommConfig(compressor="int8")),
+    ("int4", CommConfig(compressor="int4")),
+]
 
 
 def rounds_to(acc_curve: list[float], target: float) -> int | None:
@@ -18,48 +28,97 @@ def rounds_to(acc_curve: list[float], target: float) -> int | None:
     return None
 
 
-def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0
-        ) -> dict:
+def bytes_to(acc_curve: list[float], bytes_up: list[float],
+             target: float) -> float | None:
+    total = 0.0
+    for a, b in zip(acc_curve, bytes_up):
+        total += b
+        if a >= target:
+            return total
+    return None
+
+
+def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
+        algorithms: tuple[str, ...] = ("fedavg", "mdsl")) -> dict:
     rounds = 8 if quick else 20
     width = 2 if quick else 8
     workers = 10 if quick else 50
     recs = {}
-    for algo in ["fedavg", "mdsl"]:
-        recs[algo] = run_paper_experiment(
-            algorithm=algo, case="noniid1", dataset=dataset, rounds=rounds,
-            num_workers=workers, width_mult=width, local_epochs=2,
-            n_local=256 if quick else 512, lr=0.05 if quick else 0.01,
-            velocity_clip=0.1, seed=seed, verbose=False)
+    for algo in algorithms:
+        for cname, comm in SWEEP:
+            recs[(algo, cname)] = run_paper_experiment(
+                algorithm=algo, case="noniid1", dataset=dataset,
+                rounds=rounds, num_workers=workers, width_mult=width,
+                local_epochs=2, n_local=256 if quick else 512,
+                lr=0.05 if quick else 0.01, velocity_clip=0.1, seed=seed,
+                comm=comm, verbose=False)
 
-    n = recs["mdsl"]["n_params"]
+    # baselines: dense FedAvg when it ran, else the first algorithm's
+    # identity run (run() accepts any algorithm subset)
+    ref_algo = "fedavg" if "fedavg" in algorithms else algorithms[0]
+    n = recs[(algorithms[0], "identity")]["n_params"]
     C = workers
-    fed_total = n * C * rounds
-    mdsl_total = recs["mdsl"]["total_uploaded_params"]
-    target = 0.9 * max(recs["fedavg"]["best_acc"], 1e-9)
+    target = 0.9 * max(recs[(ref_algo, "identity")]["best_acc"], 1e-9)
 
     rows = []
-    for algo in ["fedavg", "mdsl"]:
-        r = recs[algo]
-        total = (fed_total if algo == "fedavg"
-                 else r["total_uploaded_params"])
+    for (algo, cname), r in recs.items():
+        total = r["total_bytes_up"]
         rows.append([
-            algo, f"{r['final_acc']:.3f}",
+            algo, cname, f"{r['final_acc']:.3f}",
             f"{sum(r['selected']) / rounds:.1f}/{C}",
-            f"{total / 1e6:.1f}M",
-            rounds_to(r["acc"], target) or f">{rounds}"])
+            f"{r['compression_ratio']:.1f}x",
+            f"{total / 2**20:.2f}MiB",
+            rounds_to(r["acc"], target) or f">{rounds}",
+            (lambda b: f"{b / 2**20:.2f}MiB" if b else "-")(
+                bytes_to(r["acc"], r["bytes_up"], target))])
     print_table(
-        ["algorithm", "final_acc", "mean uploads/round", "total params up",
-         f"rounds to {target:.2f}"],
-        rows, "§IV-C — communication efficiency (non-iid I)")
-    saving = 1.0 - mdsl_total / fed_total
-    print(f"M-DSL upload saving vs FedAvg: {100 * saving:.1f}%")
+        ["algorithm", "compressor", "final_acc", "uploads/round",
+         "ratio", "total up", f"rounds to {target:.2f}",
+         f"bytes to {target:.2f}"],
+        rows, "§IV-C — communication efficiency (non-iid I), bytes on wire")
 
-    rec = {"n_params": n, "C": C, "rounds": rounds,
-           "fedavg_total_uploads": fed_total,
-           "mdsl_total_uploads": mdsl_total, "saving_frac": saving,
-           "mdsl_selected_trace": recs["mdsl"]["selected"],
-           "fedavg_acc": recs["fedavg"]["acc"],
-           "mdsl_acc": recs["mdsl"]["acc"]}
+    ref_total = recs[(ref_algo, "identity")]["total_bytes_up"]
+    best_key = min(
+        ((k, r) for k, r in recs.items()
+         if r["final_acc"] >= target),
+        key=lambda kr: kr[1]["total_bytes_up"], default=(None, None))[0]
+    rec = {"n_params": n, "C": C, "rounds": rounds, "target_acc": target,
+           "ref_algorithm": ref_algo, "ref_dense_bytes": ref_total}
+    if "fedavg" in algorithms and "mdsl" in algorithms:
+        fed_total = recs[("fedavg", "identity")]["total_bytes_up"]
+        mdsl_total = recs[("mdsl", "identity")]["total_bytes_up"]
+        saving_sel = 1.0 - mdsl_total / fed_total
+        print(f"M-DSL selection-only saving vs FedAvg: "
+              f"{100 * saving_sel:.1f}%")
+        rec.update({
+            "fedavg_dense_bytes": fed_total,
+            "mdsl_dense_bytes": mdsl_total,
+            "selection_saving_frac": saving_sel,
+            # legacy fields (parameter counts) kept for older consumers
+            "fedavg_total_uploads": n * C * rounds,
+            "mdsl_total_uploads": recs[("mdsl", "identity")][
+                "total_uploaded_params"],
+            "saving_frac": saving_sel,
+            "mdsl_selected_trace": recs[("mdsl", "identity")]["selected"],
+            "fedavg_acc": recs[("fedavg", "identity")]["acc"],
+            "mdsl_acc": recs[("mdsl", "identity")]["acc"]})
+    if best_key:
+        best = recs[best_key]
+        print(f"cheapest config reaching {target:.2f}: "
+              f"{best_key[0]}+{best_key[1]} at "
+              f"{best['total_bytes_up'] / 2**20:.2f}MiB "
+              f"({ref_total / max(best['total_bytes_up'], 1):.1f}x less "
+              f"than dense {ref_algo})")
+
+    rec.update({"sweep": {f"{a}+{c}": {
+               "final_acc": r["final_acc"],
+               "acc": r["acc"],
+               "total_bytes_up": r["total_bytes_up"],
+               "bytes_up": r["bytes_up"],
+               "compression_ratio": r["compression_ratio"],
+               "selected": r["selected"],
+               "delivered": r["delivered"],
+           } for (a, c), r in recs.items()}})
     save_record("comm_efficiency", rec)
     return rec
 

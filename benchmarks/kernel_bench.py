@@ -89,6 +89,35 @@ def bench_flash_attention() -> list[list]:
     return rows
 
 
+def bench_quant_pack() -> list[list]:
+    from repro.kernels.quant_pack import (dequant_unpack_ref, quant_pack_2d,
+                                          quant_pack_ref)
+    from repro.kernels.quant_pack.quant_pack import BLOCK_ROWS
+    rows = []
+    for n, bits in [(1 << 16, 8), (1 << 20, 8), (1 << 20, 4)]:
+        x = jax.random.normal(KEY, (n // 128, 128))
+        seed = jnp.int32(7)
+        pk, sk = quant_pack_2d(x, seed, bits=bits, interpret=True)
+        pr, sr = quant_pack_ref(x, seed, bits=bits)
+        # kernel vs oracle must be bit-identical (shared hash RNG)
+        err = max(float(jnp.abs(pk.astype(jnp.int32)
+                                - pr.astype(jnp.int32)).max()),
+                  float(jnp.abs(sk - sr).max()))
+        # sanity: the round trip stays within one quantization step
+        xh = dequant_unpack_ref(pr, sr, bits=bits)
+        qmax = 127.0 if bits == 8 else 7.0
+        assert float(jnp.abs(xh - x).max()) <= float(
+            jnp.abs(x).max()) / qmax + 1e-6
+        hbm = n * 4 + n * bits // 8   # read f32, write packed (+scales)
+        vmem = int((4 + bits / 8 + 1) * BLOCK_ROWS * 128)
+        t_ref = _time(lambda: quant_pack_ref(x, seed, bits=bits))
+        rows.append([f"quant_pack(int{bits})", f"n={n}", f"{err:.2e}",
+                     f"{vmem / 2**10:.0f}KiB",
+                     f"{hbm / HBM_BW * 1e6:.1f}us (mem)",
+                     f"{t_ref * 1e3:.2f}ms"])
+    return rows
+
+
 def bench_rglru() -> list[list]:
     from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
     rows = []
@@ -112,7 +141,8 @@ def bench_rglru() -> list[list]:
 
 
 def run() -> dict:
-    rows = bench_pso_update() + bench_flash_attention() + bench_rglru()
+    rows = (bench_pso_update() + bench_flash_attention() + bench_rglru()
+            + bench_quant_pack())
     print_table(["kernel", "shape", "max|err|", "VMEM/step", "v5e bound",
                  "CPU ref time"], rows,
                 "Pallas kernels — interpret-mode correctness + roofline")

@@ -1,0 +1,34 @@
+"""repro.comm — edge uplink simulation: compression, channel models,
+and byte-accurate communication accounting.
+
+The seed repo modeled the paper's §IV-C comm cost as a parameter
+counter; this package puts a wire between the workers and the PS so the
+comm/accuracy trade-off is an experiment axis:
+
+  compress.py  pytree compressors (identity / top-k / int8 / int4 via
+               the kernels/quant_pack fused kernel) with per-worker
+               error-feedback residuals carried in the swarm state
+  channel.py   uplink models (ideal / packet erasure / AWGN analog
+               aggregation) + Byzantine worker attacks
+  budget.py    CommConfig + per-round CommRecord in bytes on the wire
+
+Both engines (`core/mdsl.py`, `core/swarm_dist.py`) thread a
+`CommConfig` through their round functions; `launch/train.py` exposes
+the flags and `benchmarks/comm_efficiency.py` sweeps the trade-off.
+"""
+from repro.comm.budget import (BYZANTINE_MODES, CHANNELS, COMPRESSORS,
+                               CommConfig, CommRecord, dense_bytes,
+                               leaf_payload_bytes, payload_bytes,
+                               round_record, topk_count)
+from repro.comm.channel import (corrupt_local_updates, erasure_mask,
+                                receive)
+# NOTE: the compress *function* is deliberately not re-exported — it
+# would shadow the `repro.comm.compress` submodule attribute.
+from repro.comm.compress import (compress_with_ef, init_residual,
+                                 select_residual)
+
+__all__ = ["BYZANTINE_MODES", "CHANNELS", "COMPRESSORS", "CommConfig",
+           "CommRecord", "compress_with_ef", "corrupt_local_updates",
+           "dense_bytes", "erasure_mask", "init_residual",
+           "leaf_payload_bytes", "payload_bytes", "receive",
+           "round_record", "select_residual", "topk_count"]

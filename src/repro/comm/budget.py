@@ -1,0 +1,131 @@
+"""Byte-accurate communication accounting (paper §IV-C, made literal).
+
+The seed repo counted the uplink as `n * sum_i s_i` *parameters*. This
+module replaces that with bytes-on-the-wire: every compressor declares
+its exact payload (values + indices + scales) and the per-round
+`CommRecord` reports transmitted vs delivered bytes after the
+selection × compression × channel pipeline.
+
+Conventions (documented here, relied on by tests and benchmarks):
+  * uplink payloads are counted per *transmitting* worker — a packet
+    lost to erasure still consumed airtime, so `bytes_up` counts
+    selected workers while `delivered` counts survivors;
+  * the downlink is the uncompressed broadcast of w_t to all C workers
+    (downlink compression is a ROADMAP open item);
+  * quantized payloads carry one f32 scale per kernel block
+    (`kernels/quant_pack` granularity), top-k payloads carry f32 value
+    + int32 index pairs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+FLOAT_BYTES = 4   # fp32 model / value payloads
+INDEX_BYTES = 4   # int32 coordinate payloads (top-k)
+SCALE_BYTES = 4   # one fp32 scale per quantization block
+
+# Elements covered by one quantization-block scale. Must match
+# kernels/quant_pack (BLOCK_ROWS * 128 lanes).
+QUANT_BLOCK_ELEMS = 256 * 128
+
+COMPRESSORS = ("identity", "topk", "int8", "int4")
+CHANNELS = ("ideal", "erasure", "awgn")
+BYZANTINE_MODES = ("sign_flip", "gaussian")
+
+
+class CommConfig(NamedTuple):
+    """Static (hashable) uplink configuration, carried on the engine
+    configs and closed over by the jitted round functions."""
+    compressor: str = "identity"        # see COMPRESSORS
+    topk_ratio: float = 0.05            # fraction of entries kept per leaf
+    error_feedback: bool = True         # carry compression error residuals
+    channel: str = "ideal"              # see CHANNELS
+    drop_prob: float = 0.1              # erasure: P(upload lost)
+    snr_db: float = 20.0                # awgn: analog-aggregation SNR
+    byzantine: int = 0                  # adversarial workers (last k of C)
+    byzantine_mode: str = "sign_flip"   # see BYZANTINE_MODES
+    byzantine_scale: float = 1.0        # gaussian attack std
+
+    def validate(self) -> "CommConfig":
+        if self.compressor not in COMPRESSORS:
+            raise ValueError(f"unknown compressor {self.compressor!r}")
+        if self.channel not in CHANNELS:
+            raise ValueError(f"unknown channel {self.channel!r}")
+        if self.byzantine_mode not in BYZANTINE_MODES:
+            raise ValueError(f"unknown byzantine mode "
+                             f"{self.byzantine_mode!r}")
+        if not 0.0 < self.topk_ratio <= 1.0:
+            raise ValueError(f"topk_ratio must be in (0, 1], got "
+                             f"{self.topk_ratio}")
+        if not 0.0 <= self.drop_prob < 1.0:
+            raise ValueError(f"drop_prob must be in [0, 1), got "
+                             f"{self.drop_prob}")
+        return self
+
+
+class CommRecord(NamedTuple):
+    """One round of wire accounting (all jnp scalars, jit-friendly).
+
+    The fields are f32 telemetry: above 2^24 bytes (~16 MiB) they lose
+    the last few bytes of precision. For exact numbers, do the byte
+    math host-side from the counts — `int(delivered)` /
+    `int(mask.sum())` times the Python-int `payload_bytes(...)`, as
+    launch/train.py does for its metrics JSON."""
+    bytes_up: Array            # transmitted: selected x compressed payload
+    bytes_down: Array          # broadcast of w_t: C x 4n
+    delivered: Array           # uploads surviving the channel
+    compression_ratio: Array   # uncompressed payload / compressed payload
+
+
+def topk_count(n: int, ratio: float) -> int:
+    """Entries kept by top-k on an n-element leaf (>= 1)."""
+    return max(1, int(n * ratio))
+
+
+def _quant_blocks(n: int) -> int:
+    return -(-n // QUANT_BLOCK_ELEMS)
+
+
+def leaf_payload_bytes(cfg: CommConfig, n: int) -> int:
+    """Exact uplink bytes for one n-element f32 leaf."""
+    if cfg.compressor == "identity":
+        return n * FLOAT_BYTES
+    if cfg.compressor == "topk":
+        return topk_count(n, cfg.topk_ratio) * (FLOAT_BYTES + INDEX_BYTES)
+    if cfg.compressor == "int8":
+        return n + _quant_blocks(n) * SCALE_BYTES
+    if cfg.compressor == "int4":
+        return -(-n // 2) + _quant_blocks(n) * SCALE_BYTES
+    raise ValueError(cfg.compressor)
+
+
+def payload_bytes(cfg: CommConfig, params: PyTree) -> int:
+    """Per-worker uplink payload for a whole model pytree. Shapes are
+    static under jit, so this is a Python int usable inside traced code."""
+    return sum(leaf_payload_bytes(cfg, x.size)
+               for x in jax.tree.leaves(params))
+
+
+def dense_bytes(params: PyTree) -> int:
+    """Uncompressed f32 payload (the seed repo's implicit unit)."""
+    return sum(x.size for x in jax.tree.leaves(params)) * FLOAT_BYTES
+
+
+def round_record(cfg: CommConfig, params: PyTree, num_workers: int,
+                 mask: Array, mask_eff: Array) -> CommRecord:
+    """Wire accounting for one round: `mask` is the Eq.-6 selection,
+    `mask_eff` the post-channel survivor mask."""
+    payload = payload_bytes(cfg, params)
+    dense = dense_bytes(params)
+    return CommRecord(
+        bytes_up=mask.sum() * payload,
+        bytes_down=jnp.asarray(num_workers * dense, jnp.float32),
+        delivered=mask_eff.sum(),
+        compression_ratio=jnp.asarray(dense / payload, jnp.float32),
+    )

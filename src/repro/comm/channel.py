@@ -1,0 +1,93 @@
+"""Uplink channel models for the selected workers' uploads.
+
+  ideal     lossless digital uplink (the seed repo's implicit model)
+  erasure   each selected upload is lost i.i.d. with `drop_prob`
+            (packet erasure / straggler timeout). A lost upload falls
+            out of Eq. 7's masked mean — the denominator shrinks to the
+            survivors and an all-lost round leaves w_t unchanged —
+            rather than entering as a zero delta that drags the mean.
+  awgn      over-the-air analog aggregation (arXiv:2510.18152): the PS
+            receives the superposed sum of the selected deltas plus
+            AWGN at `snr_db` relative to the superposed signal power,
+            then normalizes by |S|.
+
+Byzantine workers (CB-DSL, arXiv:2208.05578) are modeled as faulty
+nodes: the *last* `byzantine` of the C workers compute adversarial
+local updates (sign-flipped, or pure Gaussian noise) that corrupt their
+own round params. Their D_g scores therefore reflect the corruption,
+which is what lets Eq. 6's function-value selection reject them — the
+CB-DSL robustness mechanism — while FedAvg averages them in every round.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.budget import CommConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+def corrupt_local_updates(cfg: CommConfig, prev_params: PyTree,
+                          new_params: PyTree, key: Array) -> PyTree:
+    """Replace the last `cfg.byzantine` workers' local updates with the
+    attack. All leaves carry a leading worker dim C."""
+    if cfg.byzantine <= 0:
+        return new_params
+    leaves, treedef = jax.tree.flatten(new_params)
+    prev_leaves = jax.tree.leaves(prev_params)
+    C = leaves[0].shape[0]
+    byz = (jnp.arange(C) >= C - cfg.byzantine)
+
+    out = []
+    for i, (new, prev) in enumerate(zip(leaves, prev_leaves)):
+        if cfg.byzantine_mode == "sign_flip":
+            attacked = 2.0 * prev - new          # delta -> -delta
+        else:                                    # gaussian
+            noise = cfg.byzantine_scale * jax.random.normal(
+                jax.random.fold_in(key, i), new.shape, jnp.float32)
+            attacked = prev + noise.astype(new.dtype)
+        m = byz.reshape((-1,) + (1,) * (new.ndim - 1))
+        out.append(jnp.where(m, attacked.astype(new.dtype), new))
+    return jax.tree.unflatten(treedef, out)
+
+
+def erasure_mask(cfg: CommConfig, mask: Array, key: Array) -> Array:
+    """Post-channel survivor mask: which selected uploads arrived."""
+    if cfg.channel != "erasure":
+        return mask
+    keep = jax.random.bernoulli(key, 1.0 - cfg.drop_prob, mask.shape)
+    return mask * keep.astype(mask.dtype)
+
+
+def receive(cfg: CommConfig, global_params: PyTree, wire_deltas: PyTree,
+            mask: Array, key: Array) -> tuple[PyTree, Array]:
+    """Uplink + Eq. 7: push the selected workers' wire deltas through
+    the channel and fold the received mean into the global model.
+
+    wire_deltas: pytree with leading worker dim C (decoded payloads from
+    `compress`); mask: (C,) Eq.-6 selection. Returns (w_{t+1}, mask_eff)
+    where mask_eff marks the uploads that actually arrived.
+    """
+    ekey, nkey = jax.random.split(key)
+    mask_eff = erasure_mask(cfg, mask, ekey)
+    denom = jnp.maximum(mask_eff.sum(), 1.0)
+
+    g_leaves, treedef = jax.tree.flatten(global_params)
+    d_leaves = jax.tree.leaves(wire_deltas)
+    out = []
+    for i, (g, d) in enumerate(zip(g_leaves, d_leaves)):
+        m = mask_eff.reshape((-1,) + (1,) * (d.ndim - 1))
+        s = (m * d.astype(jnp.float32)).sum(axis=0)
+        if cfg.channel == "awgn":
+            # AWGN on the superposed analog signal, before the 1/|S|
+            # normalization; sigma from the per-round signal power.
+            sig_rms = jnp.sqrt(jnp.mean(s * s))
+            sigma = sig_rms * (10.0 ** (-cfg.snr_db / 20.0))
+            s = s + sigma * jax.random.normal(jax.random.fold_in(nkey, i),
+                                              s.shape, jnp.float32)
+        out.append((g + s / denom).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out), mask_eff

@@ -38,6 +38,10 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import budget as comm_budget
+from repro.comm import channel as comm_channel
+from repro.comm import compress as comm_compress
+from repro.comm.budget import CommConfig
 from repro.core import pso, selection
 from repro.core.pso import (GlobalBest, PsoCoefficients, PsoHyperParams,
                             WorkerState)
@@ -55,6 +59,7 @@ class MdslConfig(NamedTuple):
     batch_size: int = 64             # paper §V-A
     hp: PsoHyperParams = PsoHyperParams()
     pso_every_step: bool = False     # per-step Eq. 8 (unit tests)
+    comm: CommConfig = CommConfig()  # uplink compression + channel
 
 
 class SwarmTrainState(NamedTuple):
@@ -66,6 +71,7 @@ class SwarmTrainState(NamedTuple):
     sel: SelectionState
     round_idx: Array                 # t
     eta: Array                       # (C,) non-iid degrees (static over rounds)
+    residual: PyTree                 # (C, ...) error-feedback state
 
 
 class RoundMetrics(NamedTuple):
@@ -75,6 +81,10 @@ class RoundMetrics(NamedTuple):
     global_loss: Array               # F(w_{t+1}; D_g)
     uploaded_params: Array           # n * sum_i s_i (paper §IV-C)
     selected_count: Array
+    bytes_up: Array                  # wire bytes transmitted this round
+    bytes_down: Array                # broadcast of w_t to all C workers
+    delivered_count: Array           # uploads surviving the channel
+    compression_ratio: Array         # dense payload / compressed payload
 
 
 def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
@@ -91,6 +101,7 @@ def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
         sel=selection.init_selection_state(),
         round_idx=jnp.zeros((), jnp.int32),
         eta=eta,
+        residual=comm_compress.init_residual(stacked),
     )
 
 
@@ -188,7 +199,7 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
     algorithm = cfg.algorithm
     use_pso = algorithm != "fedavg"
 
-    ckey, tkey = jax.random.split(key)
+    ckey, tkey, bkey, qkey, wkey = jax.random.split(key, 5)
     # per-WORKER coefficient draws (classic PSO: each particle has its
     # own random factors). A shared draw hits every worker with the same
     # bad perturbation, leaving the selection rule nothing to filter —
@@ -209,6 +220,11 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
                                     coeffs=c)
     )(workers, data_x, data_y, jax.random.split(tkey, C), coeffs)
 
+    # Byzantine workers compute adversarial updates (comm/channel.py);
+    # corruption lands in their params so Eq. 6 can see (and reject) it.
+    workers = workers._replace(params=comm_channel.corrupt_local_updates(
+        cfg.comm, prev_params, workers.params, bkey))
+
     eval_losses = jax.vmap(eval_on_dg)(workers.params)
 
     # --- Lines 5-6: scores + selection (Eqs. 4-6). ---
@@ -218,20 +234,33 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
         theta = eval_losses
     mask, sel = _selection_mask(algorithm, theta, state.sel)
 
-    # --- Lines 7-9: PS aggregation (Eq. 7) + global best (Eq. 10). ---
-    global_params = selection.aggregate_global(
-        state.global_params, workers.params, prev_params, mask)
+    # --- Lines 7-9: compress, transmit, aggregate (Eq. 7 through the
+    # comm/ wire), then global best (Eq. 10). With the default
+    # CommConfig (identity/ideal) this is exactly the seed's masked
+    # delta-mean. ---
+    delta = jax.tree.map(lambda a, b: a - b, workers.params, prev_params)
+    wire, new_residual = jax.vmap(
+        functools.partial(comm_compress.compress_with_ef, cfg.comm)
+    )(delta, state.residual, jax.random.split(qkey, C))
+    residual = comm_compress.select_residual(mask, new_residual,
+                                             state.residual)
+    global_params, mask_eff = comm_channel.receive(
+        cfg.comm, state.global_params, wire, mask, wkey)
+    rec = comm_budget.round_record(cfg.comm, state.global_params, C, mask,
+                                   mask_eff)
     global_loss = eval_on_dg(global_params)
     gbest = pso.update_global_best(state.gbest, global_params, global_loss)
 
     next_state = SwarmTrainState(
         workers=workers, global_params=global_params, gbest=gbest, sel=sel,
-        round_idx=state.round_idx + 1, eta=state.eta)
+        round_idx=state.round_idx + 1, eta=state.eta, residual=residual)
     metrics = RoundMetrics(
         eval_losses=eval_losses, theta=theta, mask=mask,
         global_loss=global_loss,
         uploaded_params=selection.uploaded_parameter_count(mask, n_params),
-        selected_count=mask.sum())
+        selected_count=mask.sum(), bytes_up=rec.bytes_up,
+        bytes_down=rec.bytes_down, delivered_count=rec.delivered,
+        compression_ratio=rec.compression_ratio)
     return next_state, metrics
 
 

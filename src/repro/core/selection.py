@@ -63,6 +63,11 @@ def aggregate_global(global_params: PyTree, worker_params: PyTree,
     worker_params / prev_worker_params: pytrees whose leaves carry a
     leading worker dim C; mask: (C,). Lowers to one all-reduce when the
     worker dim is mesh-sharded.
+
+    The engines now aggregate through `repro.comm.channel.receive`
+    (compression + channel on the wire deltas); with the default
+    CommConfig that path reduces to exactly this function, which remains
+    the property-tested Eq.-7 reference.
     """
     denom = jnp.maximum(mask.sum(), 1.0)
 

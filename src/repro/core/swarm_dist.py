@@ -10,10 +10,11 @@ jitted `train_step` is one communication round:
     2. Eq. 8 PSO displacement (inertia + cognitive + social + SGD delta)
     3. every worker scores F_{i,t} on the shared eval batch (D_g)
     4. Eq. 5/6 selection against the previous round's mean score
-    5. Eq. 7 masked delta-mean into the global model
-       -> ONE all-reduce over worker_axes (the FedAvg collective with a
-          Boolean weight; the paper's comm saving shows up as masked
-          payload in the wire-protocol driver, launch/train.py)
+    5. Eq. 7 through the repro.comm wire: per-worker delta compression
+       (error-feedback residuals ride in the state), channel model
+       (erasure / AWGN / Byzantine), masked delta-mean into the global
+       model -> ONE all-reduce over worker_axes, with bytes-on-the-wire
+       accounting in RoundInfo
     6. Eq. 9/10 local/global best refresh
 
 vmap over the worker dim uses `spmd_axis_name=worker_axes` so internal
@@ -29,6 +30,10 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import budget as comm_budget
+from repro.comm import channel as comm_channel
+from repro.comm import compress as comm_compress
+from repro.comm.budget import CommConfig
 from repro.core import pso, selection
 from repro.core.pso import PsoHyperParams
 
@@ -46,6 +51,7 @@ class DistSwarmConfig(NamedTuple):
     # grad-accumulation chunks per local step: caps per-device activation
     # memory at batch/microbatches (EXPERIMENTS.md §Perf iteration 2)
     microbatches: int = 1
+    comm: CommConfig = CommConfig()  # uplink compression + channel
 
 
 class DistSwarmState(NamedTuple):
@@ -60,6 +66,7 @@ class DistSwarmState(NamedTuple):
     prev_theta_mean: Array    # () Eq. 6 threshold
     eta: Array                # (W,) non-iid degrees
     round_idx: Array          # ()
+    residual: PyTree          # (W, ...) error-feedback state
 
 
 class RoundInfo(NamedTuple):
@@ -67,6 +74,8 @@ class RoundInfo(NamedTuple):
     theta: Array              # (W,)
     mask: Array               # (W,)
     global_loss: Array        # ()
+    bytes_up: Array           # () wire bytes transmitted this round
+    delivered: Array          # () uploads surviving the channel
 
 
 def init_state(global_params: PyTree, cfg: DistSwarmConfig,
@@ -86,6 +95,8 @@ def init_state(global_params: PyTree, cfg: DistSwarmConfig,
         prev_theta_mean=jnp.asarray(jnp.inf, jnp.float32),
         eta=jnp.zeros((W,), jnp.float32) if eta is None else eta,
         round_idx=jnp.zeros((), jnp.int32),
+        residual=stack(jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), global_params)),
     )
 
 
@@ -156,20 +167,20 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
     def train_step(state: DistSwarmState, batch: PyTree, eval_batch: PyTree,
                    key: Array) -> tuple[DistSwarmState, RoundInfo]:
         # per-worker coefficient draws (see core/mdsl.py)
-        coeffs = jax.vmap(pso.sample_coefficients)(jax.random.split(key, W))
+        ckey, bkey, qkey, wkey = jax.random.split(key, 4)
+        coeffs = jax.vmap(pso.sample_coefficients)(jax.random.split(ckey, W))
         lr = pso.decayed_lr(cfg.hp, state.round_idx)
 
         run_local = functools.partial(local_round, lr=lr)
         eval_one = lambda p: loss_fn(p, eval_batch)
+        sq = lambda t: jax.tree.map(lambda x: x[0], t)
+        ex = lambda t: jax.tree.map(lambda x: x[None], t)
         if W == 1:
-            sq = lambda t: jax.tree.map(lambda x: x[0], t)
             p1, v1 = run_local(sq(state.params), sq(state.velocity),
                                sq(state.best_params), state.gbest_params,
                                jax.tree.map(lambda x: x[0], batch),
                                coeffs=sq(coeffs))
-            ex = lambda t: jax.tree.map(lambda x: x[None], t)
             new_params, new_vel = ex(p1), ex(v1)
-            losses = eval_one(p1)[None]
         else:
             vmapped = jax.vmap(run_local,
                                in_axes=(0, 0, 0, None, 0, 0),
@@ -177,6 +188,14 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
             new_params, new_vel = vmapped(state.params, state.velocity,
                                           state.best_params,
                                           state.gbest_params, batch, coeffs)
+
+        # Byzantine workers' local updates are adversarial (comm/channel):
+        # corruption lands in their params so Eq. 6 can reject them.
+        new_params = comm_channel.corrupt_local_updates(
+            cfg.comm, state.params, new_params, bkey)
+        if W == 1:
+            losses = eval_one(sq(new_params))[None]
+        else:
             losses = jax.vmap(eval_one)(new_params)
 
         # --- Eqs. 5-6: scores + adaptive-threshold selection -------------
@@ -185,9 +204,25 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
         best = jax.nn.one_hot(jnp.argmin(theta), W, dtype=jnp.float32)
         mask = jnp.where(mask.sum() > 0, mask, best)
 
-        # --- Eq. 7: masked delta-mean -> all-reduce over worker axes ------
-        global_params = selection.aggregate_global(
-            state.global_params, new_params, state.params, mask)
+        # --- Eq. 7 through the wire: compress (+ error feedback), push
+        # through the channel, aggregate -> one all-reduce over worker
+        # axes. Default CommConfig reduces to the seed's masked mean. ---
+        delta = jax.tree.map(lambda a, b: a - b, new_params, state.params)
+        if W == 1:
+            w1, r1 = comm_compress.compress_with_ef(
+                cfg.comm, sq(delta), sq(state.residual), qkey)
+            wire, new_res = ex(w1), ex(r1)
+        else:
+            wire, new_res = jax.vmap(
+                functools.partial(comm_compress.compress_with_ef, cfg.comm),
+                spmd_axis_name=_spmd_axis_name(cfg)
+            )(delta, state.residual, jax.random.split(qkey, W))
+        residual = comm_compress.select_residual(mask, new_res,
+                                                 state.residual)
+        global_params, mask_eff = comm_channel.receive(
+            cfg.comm, state.global_params, wire, mask, wkey)
+        rec = comm_budget.round_record(cfg.comm, state.global_params, W,
+                                       mask, mask_eff)
         global_loss = eval_one(global_params)
 
         # --- Eqs. 9-10: bests ---------------------------------------------
@@ -208,9 +243,11 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
             gbest_params=gbest_params,
             gbest_loss=jnp.minimum(global_loss, state.gbest_loss),
             prev_theta_mean=theta.mean(), eta=state.eta,
-            round_idx=state.round_idx + 1)
+            round_idx=state.round_idx + 1, residual=residual)
         return next_state, RoundInfo(losses=losses, theta=theta, mask=mask,
-                                     global_loss=global_loss)
+                                     global_loss=global_loss,
+                                     bytes_up=rec.bytes_up,
+                                     delivered=rec.delivered)
 
     return train_step
 
@@ -248,6 +285,7 @@ def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
         return jax.tree.map(lambda a, b: a - b, trained, params)
 
     def train_step(state: DistSwarmState, batch, eval_batch, key):
+        bkey, qkey, wkey = jax.random.split(key, 3)
         lr = pso.decayed_lr(cfg.hp, state.round_idx)
         if W == 1:
             delta = local(state.global_params,
@@ -257,14 +295,34 @@ def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
             deltas = jax.vmap(
                 lambda b: local(state.global_params, b, lr),
                 spmd_axis_name=_spmd_axis_name(cfg))(batch)
-        global_params = jax.tree.map(
-            lambda g, d: (g + d.mean(axis=0)).astype(g.dtype),
-            state.global_params, deltas)
+        # FedAvg rides the same wire: byzantine deltas, compression with
+        # error feedback, channel — but every worker uploads (mask = 1).
+        zeros = jax.tree.map(jnp.zeros_like, deltas)
+        deltas = comm_channel.corrupt_local_updates(cfg.comm, zeros,
+                                                    deltas, bkey)
+        mask = jnp.ones((W,), jnp.float32)
+        if W == 1:
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            w1, r1 = comm_compress.compress_with_ef(
+                cfg.comm, sq(deltas), sq(state.residual), qkey)
+            wire = jax.tree.map(lambda x: x[None], w1)
+            new_res = jax.tree.map(lambda x: x[None], r1)
+        else:
+            wire, new_res = jax.vmap(
+                functools.partial(comm_compress.compress_with_ef, cfg.comm),
+                spmd_axis_name=_spmd_axis_name(cfg)
+            )(deltas, state.residual, jax.random.split(qkey, W))
+        global_params, mask_eff = comm_channel.receive(
+            cfg.comm, state.global_params, wire, mask, wkey)
+        rec = comm_budget.round_record(cfg.comm, state.global_params, W,
+                                       mask, mask_eff)
         global_loss = loss_fn(global_params, eval_batch)
         next_state = state._replace(global_params=global_params,
-                                    round_idx=state.round_idx + 1)
+                                    round_idx=state.round_idx + 1,
+                                    residual=new_res)
         info = RoundInfo(losses=jnp.zeros((W,)), theta=jnp.zeros((W,)),
-                         mask=jnp.ones((W,)), global_loss=global_loss)
+                         mask=mask, global_loss=global_loss,
+                         bytes_up=rec.bytes_up, delivered=rec.delivered)
         return next_state, info
 
     return train_step

@@ -7,7 +7,11 @@ Each kernel module trio provides:
 
 Kernels: pso_update (the paper's Eq.-8 fused pointwise swarm update),
 flash_attention (blockwise causal/sliding attention), rglru_scan
-(streaming linear-recurrence scan). On this CPU-only container they
-execute via interpret=True (`repro.kernels.runtime.interpret_default`);
-on TPU they compile through Mosaic.
+(streaming linear-recurrence scan), quant_pack (fused stochastic
+int8/int4 quantize-and-pack for the repro.comm uplink compressors; its
+hash-RNG makes the ref.py oracle bit-identical to the kernel). On this
+CPU-only container they execute via interpret=True
+(`repro.kernels.runtime.interpret_default`) — quant_pack dispatches to
+its jnp ref path instead, which is cheaper under the engines' vmap —
+and on TPU they compile through Mosaic.
 """

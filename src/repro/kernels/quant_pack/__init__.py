@@ -1,0 +1,10 @@
+from repro.kernels.quant_pack.ops import (dequantize_unpack, quant_dequant,
+                                          quantize_pack)
+from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS, QMAX,
+                                                 block_uniform,
+                                                 quant_pack_2d)
+from repro.kernels.quant_pack.ref import dequant_unpack_ref, quant_pack_ref
+
+__all__ = ["BLOCK_ROWS", "QMAX", "block_uniform", "dequant_unpack_ref",
+           "dequantize_unpack", "quant_dequant", "quant_pack_2d",
+           "quant_pack_ref", "quantize_pack"]

@@ -1,0 +1,64 @@
+"""Public wrapper for the quantize-pack kernel: flattens an arbitrary
+array (or pytree leaf) to the kernel's (rows, 128) layout, produces the
+packed wire payload + block scales, and exposes the simulation-friendly
+quantize-dequantize round trip used by `repro/comm/compress.py`.
+
+Dispatch: on TPU the fused pallas kernel runs compiled; on CPU the
+bit-identical ref.py path runs instead (plain jnp — fast under vmap,
+same payload bytes)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS, quant_pack_2d)
+from repro.kernels.quant_pack.ref import dequant_unpack_ref, quant_pack_ref
+
+_LANES = 128
+
+
+def _pad_2d(flat: jax.Array) -> jax.Array:
+    n = flat.shape[0]
+    chunk = BLOCK_ROWS * _LANES
+    padded = -(-n // chunk) * chunk
+    return jnp.pad(flat, (0, padded - n)).reshape(-1, _LANES)
+
+
+def quantize_pack(x: jax.Array, seed: jax.Array, *, bits: int = 8,
+                  interpret: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Pack any-shaped f32 array into the b-bit wire format.
+    Returns (packed, scales); `dequantize_unpack(..., shape=x.shape)`
+    inverts. interpret=None dispatches by backend (kernel on TPU, ref
+    on CPU)."""
+    if interpret is None:
+        interpret = runtime.interpret_default()
+    x2 = _pad_2d(x.reshape(-1).astype(jnp.float32))
+    if interpret:
+        return quant_pack_ref(x2, seed, bits=bits)
+    return quant_pack_2d(x2, seed, bits=bits, interpret=False)
+
+
+def dequantize_unpack(packed: jax.Array, scales: jax.Array,
+                      shape: tuple[int, ...], *, bits: int = 8,
+                      dtype=jnp.float32) -> jax.Array:
+    """Decode a wire payload back to a dense array of `shape`."""
+    x2 = dequant_unpack_ref(packed, scales, bits=bits)
+    n = 1
+    for s in shape:
+        n *= s
+    return x2.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quant_dequant(x: jax.Array, seed: jax.Array, *, bits: int = 8,
+                  interpret: bool | None = None) -> jax.Array:
+    """What the receiver decodes: one fused quantize-pack-unpack round
+    trip (the engines' simulation path; byte cost comes from
+    `repro.comm.budget.leaf_payload_bytes`)."""
+    packed, scales = quantize_pack(x, seed, bits=bits, interpret=interpret)
+    return dequantize_unpack(packed, scales, x.shape, bits=bits,
+                             dtype=x.dtype)

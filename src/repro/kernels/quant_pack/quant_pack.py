@@ -1,0 +1,119 @@
+"""Fused stochastic quantize-and-pack kernel (uplink compression).
+
+The int8/int4 uplink compressors (`repro/comm/compress.py`) reduce a
+worker's round delta to b-bit integers plus one f32 scale per block.
+Unfused, XLA materializes |x|, the block max, the scaled tensor, the
+random field, and the rounded tensor as separate HBM round-trips; the
+payload is produced in one pass here: each grid step reads one
+(BLOCK_ROWS, 128) f32 tile from VMEM and emits the packed integer tile
+plus its scale (read N f32 words, write N*b/32 + 1).
+
+Layout: the flattened parameter vector is tiled to (rows, 128) like
+`pso_update`. int8 packs 1:1 into an int8 tile; int4 packs two rows per
+byte — row r of the output holds rows r (low nibble) and r + B/2 (high
+nibble) of the block — keeping the 128-lane minor dim intact for TPU
+tiling (nibble-within-lane packing would shrink the minor dim to 64).
+
+Stochastic rounding uses a counter-based integer hash (`block_uniform`)
+seeded per call: pure uint32 jnp arithmetic, so the same bits are
+produced by the compiled Mosaic kernel, interpret mode, and the ref.py
+oracle — exact-equality tests and bit-identical CPU/TPU simulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256          # (256, 128) f32 tile = 128 KiB VMEM per operand
+_LANES = 128
+
+QMAX = {8: 127.0, 4: 7.0}
+
+
+def block_uniform(seed: jax.Array, block_idx: jax.Array,
+                  shape: tuple[int, int]) -> jax.Array:
+    """U[0,1) field for one block: a splitmix-style uint32 hash of
+    (seed, block, row, lane). Part of the wire spec — ref.py reuses it so
+    packed payloads are bit-identical across backends."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    h = (seed.astype(jnp.uint32) * jnp.uint32(2654435761)
+         + block_idx.astype(jnp.uint32) * jnp.uint32(976686449)
+         + r * jnp.uint32(1664525) + c * jnp.uint32(22695477))
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _quantize_block(x: jax.Array, seed: jax.Array, block_idx: jax.Array,
+                    qmax: float) -> tuple[jax.Array, jax.Array]:
+    """Shared math: per-block scale + unbiased stochastic rounding.
+    Returns (q f32 in [-qmax, qmax], scale f32).
+
+    scale is amax * (1/qmax), NOT amax / qmax: XLA strength-reduces a
+    divide-by-constant to a reciprocal multiply but interpret mode does
+    not, and the 1-ulp drift would break kernel/ref bit-equality."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0.0, amax * jnp.float32(1.0 / qmax), 1.0)
+    u = block_uniform(seed, block_idx, x.shape)
+    q = jnp.clip(jnp.floor(x / scale + u), -qmax, qmax)
+    return q, scale
+
+
+def _kernel_int8(seed_ref, x_ref, q_ref, scale_ref):
+    q, scale = _quantize_block(x_ref[...], seed_ref[0],
+                               pl.program_id(0), QMAX[8])
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[0] = scale
+
+
+def _kernel_int4(seed_ref, x_ref, q_ref, scale_ref):
+    q, scale = _quantize_block(x_ref[...], seed_ref[0],
+                               pl.program_id(0), QMAX[4])
+    half = q.shape[0] // 2
+    biased = (q + 8.0).astype(jnp.uint8)        # [-7,7] -> [1,15]
+    q_ref[...] = biased[:half] | (biased[half:] << 4)
+    scale_ref[0] = scale
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "interpret", "block_rows"))
+def quant_pack_2d(x: jax.Array, seed: jax.Array, *, bits: int = 8,
+                  interpret: bool = True,
+                  block_rows: int = BLOCK_ROWS
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Core pallas_call on a (rows, 128) f32 layout.
+
+    Returns (packed, scales): packed is int8 (rows, 128) for bits=8 or
+    uint8 (rows//2, 128) for bits=4; scales is (rows // block_rows,) f32.
+    """
+    rows, lanes = x.shape
+    assert lanes == _LANES and rows % block_rows == 0, (rows, lanes)
+    assert bits in (8, 4), bits
+    grid = (rows // block_rows,)
+    tile = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    seed_spec = pl.BlockSpec((1,), lambda i: (0,))
+    scale_spec = pl.BlockSpec((1,), lambda i: (i,))
+    if bits == 8:
+        kernel = _kernel_int8
+        q_spec = tile
+        q_shape = jax.ShapeDtypeStruct((rows, lanes), jnp.int8)
+    else:
+        kernel = _kernel_int4
+        q_spec = pl.BlockSpec((block_rows // 2, lanes), lambda i: (i, 0))
+        q_shape = jax.ShapeDtypeStruct((rows // 2, lanes), jnp.uint8)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seed_spec, tile],
+        out_specs=(q_spec, scale_spec),
+        out_shape=(q_shape,
+                   jax.ShapeDtypeStruct((rows // block_rows,), jnp.float32)),
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.int32).reshape(1), x)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the fused quantize-pack kernel.
+
+Also the CPU fallback for `repro/comm/compress.py`: it implements the
+identical block layout, scale rule, and hash-RNG rounding (shared via
+`block_uniform`), so payloads are bit-identical to the kernel while
+staying plain jnp — cheap under the engines' vmap over workers, where
+interpret-mode pallas would be needlessly slow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS, QMAX,
+                                                 _quantize_block)
+
+
+def quant_pack_ref(x: jax.Array, seed: jax.Array, *, bits: int = 8,
+                   block_rows: int = BLOCK_ROWS
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Matches quant_pack_2d bit-exactly: vmaps the kernel's per-block
+    math (same reduction order — a stacked jnp.max over all blocks can
+    differ by 1 ulp). x: (rows, 128) f32, rows a multiple of block_rows.
+    Returns (packed, scales)."""
+    rows, lanes = x.shape
+    assert lanes == 128 and rows % block_rows == 0, (rows, lanes)
+    nb = rows // block_rows
+    qmax = QMAX[bits]
+    xb = x.reshape(nb, block_rows, lanes)
+    seed = jnp.asarray(seed, jnp.int32)
+
+    # unrolled per-block loop, NOT a vmap: XLA lowers a batched max with
+    # a different reduction order than the kernel's per-block max, which
+    # shifts scales by 1 ulp and breaks bit-equality
+    per_block = [
+        _quantize_block(xb[i], seed, jnp.int32(i), qmax) for i in range(nb)]
+    q = jnp.stack([p[0] for p in per_block])
+    scales = jnp.stack([p[1] for p in per_block])
+    if bits == 8:
+        return q.astype(jnp.int8).reshape(rows, lanes), scales
+    half = block_rows // 2
+    biased = (q + 8.0).astype(jnp.uint8)
+    packed = biased[:, :half] | (biased[:, half:] << 4)
+    return packed.reshape(rows // 2, lanes), scales
+
+
+def dequant_unpack_ref(packed: jax.Array, scales: jax.Array, *,
+                       bits: int = 8,
+                       block_rows: int = BLOCK_ROWS) -> jax.Array:
+    """Inverse of quant_pack_ref (up to rounding): (rows, 128) f32."""
+    lanes = packed.shape[1]
+    if bits == 8:
+        rows = packed.shape[0]
+        q = packed.astype(jnp.float32)
+    else:
+        rows = packed.shape[0] * 2
+        half = block_rows // 2
+        pb = packed.reshape(-1, half, lanes)
+        lo = (pb & 0xF).astype(jnp.float32) - 8.0
+        hi = (pb >> 4).astype(jnp.float32) - 8.0
+        q = jnp.concatenate([lo, hi], axis=1)
+    qb = q.reshape(rows // block_rows, block_rows, lanes)
+    return (qb * scales[:, None, None]).reshape(rows, lanes)

@@ -218,7 +218,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         global_params=pshard(state_shapes.global_params, False),
         gbest_params=pshard(state_shapes.gbest_params, False),
         gbest_loss=scalar, prev_theta_mean=scalar, eta=wvec,
-        round_idx=scalar)
+        round_idx=scalar,
+        residual=pshard(state_shapes.residual, True))
 
     batch_sh = _shard_batch_specs(specs["batch"], rules, mesh,
                                   worker_axes=worker_axes)
@@ -226,7 +227,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                  ShardingRules(rules, batch=None), mesh)
     in_sh = (state_shardings, batch_sh, eval_sh, scalar)
     info_sh = swarm_dist.RoundInfo(losses=wvec, theta=wvec, mask=wvec,
-                                   global_loss=scalar)
+                                   global_loss=scalar, bytes_up=scalar,
+                                   delivered=scalar)
 
     def wrapped(state, batch, eval_batch, key):
         with use_rules(rules, mesh):

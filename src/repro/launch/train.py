@@ -14,9 +14,16 @@ Two modes:
            mesh, with checkpointing. On CPU this runs the same program
            the dry-run lowers for 512 devices.
 
+Both modes thread a repro.comm CommConfig through the engine:
+--compressor/--topk-ratio/--no-error-feedback, --channel/--drop-prob/
+--snr-db, --byzantine/--byzantine-mode. The metrics JSON then carries
+per-round bytes_up/bytes_down/delivered next to the accuracy curve.
+
 Usage:
   python -m repro.launch.train --mode paper --algorithm mdsl --case noniid2 \\
       --dataset cifar_like --rounds 40
+  python -m repro.launch.train --mode paper --algorithm mdsl --rounds 5 \\
+      --compressor topk --channel erasure
   python -m repro.launch.train --mode mesh --arch smollm-360m --steps 5
 """
 from __future__ import annotations
@@ -33,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.comm import (BYZANTINE_MODES, CHANNELS, COMPRESSORS, CommConfig,
+                        dense_bytes, payload_bytes)
 from repro.configs.base import get_arch
 from repro.configs.paper_cnn import paper_cnn, paper_resnet
 from repro.core import losses as losses_mod
@@ -79,8 +88,10 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
                          lr: float = 0.01, velocity_clip: float = 0.1,
                          seed: int = 0, eta_coeffs: Optional[tuple] = None,
                          n_local: int = 512, log_every: int = 1,
+                         comm: Optional[CommConfig] = None,
                          verbose: bool = True) -> dict:
     """One full training run; returns the metrics record."""
+    comm = (comm or CommConfig()).validate()
     data, spec = make_case_data(case, dataset, num_workers, seed, n_local)
     img_model = (paper_cnn(spec, width_mult) if model == "cnn"
                  else paper_resnet(spec, width_mult))
@@ -99,7 +110,8 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
     cfg = MdslConfig(algorithm=algorithm, tau=tau, local_epochs=local_epochs,
                      batch_size=batch_size,
                      hp=PsoHyperParams(learning_rate=lr,
-                                       velocity_clip=velocity_clip))
+                                       velocity_clip=velocity_clip),
+                     comm=comm)
     key = jax.random.PRNGKey(seed + 1)
     state = mdsl.init_state(key, img_model.init, num_workers, eta)
     n_params = mdsl.count_params(state.global_params)
@@ -113,8 +125,13 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
               "model": img_model.name, "rounds": rounds,
               "num_workers": num_workers, "tau": tau, "seed": seed,
               "n_params": n_params, "eta": np.asarray(eta).tolist(),
-              "acc": [], "global_loss": [], "selected": [],
-              "uploaded_params": [], "round_time_s": []}
+              "comm": comm._asdict(),
+              "payload_bytes_per_worker": payload_bytes(
+                  comm, state.global_params),
+              "dense_bytes_per_worker": dense_bytes(state.global_params),
+              "acc": [], "global_loss": [], "selected": [], "delivered": [],
+              "uploaded_params": [], "bytes_up": [], "bytes_down": [],
+              "round_time_s": []}
 
     for t in range(rounds):
         key, rkey = jax.random.split(key)
@@ -126,23 +143,36 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
         record["acc"].append(acc)
         record["global_loss"].append(float(metrics.global_loss))
         record["selected"].append(int(metrics.selected_count))
+        record["delivered"].append(int(metrics.delivered_count))
         record["uploaded_params"].append(float(metrics.uploaded_params))
+        # exact ints host-side: the in-jit f32 CommRecord drifts > 16 MiB
+        record["bytes_up"].append(
+            int(metrics.selected_count)
+            * record["payload_bytes_per_worker"])
+        record["bytes_down"].append(
+            num_workers * record["dense_bytes_per_worker"])
         record["round_time_s"].append(round(time.time() - t0, 2))
         if verbose and (t % log_every == 0 or t == rounds - 1):
             print(f"[{algorithm}/{case}/{dataset}] round {t + 1}/{rounds} "
                   f"acc={acc:.3f} loss={float(metrics.global_loss):.4f} "
-                  f"selected={int(metrics.selected_count)}/{num_workers}",
+                  f"selected={int(metrics.selected_count)}/{num_workers} "
+                  f"up={float(metrics.bytes_up) / 2**20:.2f}MiB",
                   flush=True)
     record["final_acc"] = record["acc"][-1]
     record["best_acc"] = max(record["acc"])
     record["total_uploaded_params"] = float(sum(record["uploaded_params"]))
+    record["total_bytes_up"] = float(sum(record["bytes_up"]))
+    record["total_bytes_down"] = float(sum(record["bytes_down"]))
+    record["compression_ratio"] = (record["dense_bytes_per_worker"]
+                                   / record["payload_bytes_per_worker"])
     return record
 
 
 def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
                       seq_len: int = 128, per_worker_batch: int = 2,
                       num_spatial: int = 2, ckpt_dir: Optional[str] = None,
-                      seed: int = 0, verbose: bool = True) -> dict:
+                      seed: int = 0, comm: Optional[CommConfig] = None,
+                      verbose: bool = True) -> dict:
     """Production path on the active devices: DistSwarm round on a
     (reduced) assigned arch. On a real TPU mesh the same builder is used
     with the full config via launch/steps.py; on CPU we exercise the jitted
@@ -158,7 +188,8 @@ def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
     dcfg = DistSwarmConfig(worker_axes=(), num_spatial=num_spatial,
                            local_steps=1, tau=0.9,
                            hp=PsoHyperParams(learning_rate=3e-3,
-                                             velocity_clip=1.0))
+                                             velocity_clip=1.0),
+                           comm=(comm or CommConfig()).validate())
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
     state = swarm_dist.init_state(params, dcfg)
@@ -179,8 +210,11 @@ def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
                 jnp.dtype(cfg.dtype))
         return out
 
+    payload = payload_bytes(dcfg.comm, params)
     record = {"arch": arch, "reduced": reduced, "steps": steps,
-              "global_loss": [], "selected": [], "step_time_s": []}
+              "comm": dcfg.comm._asdict(),
+              "payload_bytes_per_worker": payload, "global_loss": [],
+              "selected": [], "bytes_up": [], "step_time_s": []}
     for i in range(steps):
         key, k1, k2, k3 = jax.random.split(key, 4)
         t0 = time.time()
@@ -189,6 +223,8 @@ def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
         gl = float(info.global_loss)
         record["global_loss"].append(gl)
         record["selected"].append(float(info.mask.sum()))
+        # exact ints host-side (the in-jit f32 drifts above 16 MiB)
+        record["bytes_up"].append(int(info.mask.sum()) * payload)
         record["step_time_s"].append(round(time.time() - t0, 2))
         if verbose:
             print(f"[mesh/{arch}] step {i + 1}/{steps} global_loss={gl:.4f} "
@@ -215,23 +251,42 @@ def main() -> None:
     ap.add_argument("--tau", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    # comm (both modes)
+    ap.add_argument("--compressor", default="identity",
+                    choices=list(COMPRESSORS))
+    ap.add_argument("--topk-ratio", type=float, default=0.05)
+    ap.add_argument("--no-error-feedback", action="store_true")
+    ap.add_argument("--channel", default="ideal", choices=list(CHANNELS))
+    ap.add_argument("--drop-prob", type=float, default=0.1)
+    ap.add_argument("--snr-db", type=float, default=20.0)
+    ap.add_argument("--byzantine", type=int, default=0)
+    ap.add_argument("--byzantine-mode", default="sign_flip",
+                    choices=list(BYZANTINE_MODES))
     # mesh mode
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
+    comm = CommConfig(
+        compressor=args.compressor, topk_ratio=args.topk_ratio,
+        error_feedback=not args.no_error_feedback, channel=args.channel,
+        drop_prob=args.drop_prob, snr_db=args.snr_db,
+        byzantine=args.byzantine, byzantine_mode=args.byzantine_mode)
+
     if args.mode == "paper":
         rec = run_paper_experiment(
             algorithm=args.algorithm, case=args.case, dataset=args.dataset,
             rounds=args.rounds, num_workers=args.workers, model=args.model,
-            width_mult=args.width_mult, tau=args.tau, seed=args.seed)
+            width_mult=args.width_mult, tau=args.tau, seed=args.seed,
+            comm=comm)
         out = args.out or (ARTIFACTS / "train" /
                            f"{args.algorithm}__{args.case}__{args.dataset}"
                            f"__s{args.seed}.json")
     else:
         rec = run_mesh_training(args.arch, steps=args.steps,
-                                ckpt_dir=args.ckpt_dir, seed=args.seed)
+                                ckpt_dir=args.ckpt_dir, seed=args.seed,
+                                comm=comm)
         out = args.out or (ARTIFACTS / "train" / f"mesh__{args.arch}.json")
     out = Path(out)
     out.parent.mkdir(parents=True, exist_ok=True)

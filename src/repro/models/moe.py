@@ -103,6 +103,11 @@ def moe_apply(params: PyTree, x: Array, cfg) -> tuple[Array, Array]:
 
     buf = jnp.zeros((E * cap + 1, D), h.dtype)
     buf = buf.at[dest].set(hf[src_token])
+    # pin the scatter itself to a replicated layout: XLA's SPMD scatter
+    # partitioning miscompiles when the expert axis of `buf` is sharded
+    # over a mesh dim (observed on the (data, model) host mesh); the
+    # reshard to the expert-sharded FFN layout happens on `xs` below
+    buf = shard(buf, (None, "embed"))
     xs = buf[: E * cap].reshape(E, cap, D)
     xs = shard(xs, ("expert", None, "embed"))
 
@@ -118,6 +123,8 @@ def moe_apply(params: PyTree, x: Array, cfg) -> tuple[Array, Array]:
     # --- combine: gather back, weight by gate, sum over k ---
     ys_flat = jnp.concatenate(
         [ys.reshape(E * cap, D), jnp.zeros((1, D), ys.dtype)], axis=0)
+    # replicated gather for the same partitioner reason as the scatter
+    ys_flat = shard(ys_flat, (None, "embed"))
     slot_of_sorted = jnp.where(keep, dest, E * cap)
     # invert the sort: slot of flat (token,k) pair j is slot_of_sorted[rank_j]
     inv = jnp.zeros((T * K,), jnp.int32).at[sort_idx].set(

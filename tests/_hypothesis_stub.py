@@ -1,0 +1,137 @@
+"""Minimal deterministic stand-in for `hypothesis` (gated dependency).
+
+The container may not ship hypothesis; rather than skip the property
+tests, `conftest.py` installs this module under the `hypothesis` /
+`hypothesis.strategies` names when the real package is unavailable.
+
+It implements the tiny API surface the test-suite uses — `given`,
+`settings`, `assume`, and the `integers` / `floats` / `lists` /
+`sampled_from` / `booleans` strategies — with a seeded RNG derived from
+the test's qualified name, so runs are reproducible (no shrinking, no
+database). Real hypothesis, when installed, takes precedence.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    """A strategy is just a draw function over a numpy RandomState."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.RandomState):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    lo, hi = int(min_value), int(max_value)
+    return Strategy(lambda rng: int(rng.randint(lo, hi + 1)))
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=None,
+           allow_infinity=None, width=64) -> Strategy:
+    lo, hi = float(min_value), float(max_value)
+    return Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    return Strategy(lambda rng: pool[int(rng.randint(0, len(pool)))])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> Strategy:
+    def draw(rng):
+        n = int(rng.randint(min_size, max_size + 1))
+        if not unique:
+            return [elements.example(rng) for _ in range(n)]
+        out: list = []
+        attempts = 0
+        while len(out) < n and attempts < 1000:
+            v = elements.example(rng)
+            if v not in out:
+                out.append(v)
+            attempts += 1
+        return out
+
+    return Strategy(draw)
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+def settings(max_examples: int = 25, deadline=None, **_kw):
+    """Records max_examples on the decorated function; `given` reads it
+    whether settings is applied inside or outside of it."""
+
+    def deco(fn):
+        fn._hs_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+class HealthCheck:  # referenced via settings(suppress_health_check=...)
+    all = ()
+    function_scoped_fixture = None
+    too_slow = None
+
+
+def given(*strategies: Strategy, **kw_strategies: Strategy):
+    """Positional strategies bind to the RIGHTMOST parameters (matching
+    hypothesis); everything to their left (self, pytest fixtures) is left
+    for pytest to supply. The wrapper exposes the reduced signature so
+    pytest's fixture resolution never sees the drawn parameters."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_pos = len(strategies)
+        kept = params[: len(params) - n_pos] if n_pos else params
+        # pytest supplies the surviving params (self, fixtures) by
+        # keyword, so drawn values are bound by name too
+        drawn_names = [p.name for p in params[len(params) - n_pos:]]
+        if kw_strategies:
+            kept = [p for p in kept if p.name not in kw_strategies]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_ex = getattr(wrapper, "_hs_max_examples", 25)
+            seed0 = zlib.adler32(fn.__qualname__.encode("utf-8"))
+            ran = 0
+            attempt = 0
+            while ran < max_ex and attempt < max_ex * 5:
+                rng = np.random.RandomState((seed0 + attempt) % (2 ** 32))
+                drawn = {n: s.example(rng)
+                         for n, s in zip(drawn_names, strategies)}
+                drawn.update({k: s.example(rng)
+                              for k, s in kw_strategies.items()})
+                attempt += 1
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                ran += 1
+
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco

@@ -1,0 +1,286 @@
+"""repro.comm — compressor invariants, error-feedback telescoping,
+channel semantics through Eq. 7, Byzantine robustness of selection, and
+quant-pack kernel/oracle equivalence."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import budget, channel, compress
+from repro.comm.budget import CommConfig
+from repro.core import mdsl
+from repro.core.mdsl import MdslConfig
+from repro.core.pso import PsoHyperParams
+
+KEY = jax.random.PRNGKey(0)
+
+TREE = {"w": jax.random.normal(KEY, (300, 7)),
+        "b": jax.random.normal(jax.random.fold_in(KEY, 1), (11,))}
+
+
+class TestCompressors:
+    def test_identity_roundtrip(self):
+        cfg = CommConfig(compressor="identity")
+        wire = compress.compress(cfg, TREE, KEY)
+        for k in TREE:
+            np.testing.assert_array_equal(wire[k], TREE[k])
+        assert budget.payload_bytes(cfg, TREE) == budget.dense_bytes(TREE)
+
+    @pytest.mark.parametrize("ratio", [0.01, 0.1, 0.5])
+    def test_topk_keeps_largest_and_zeroes_rest(self, ratio):
+        cfg = CommConfig(compressor="topk", topk_ratio=ratio)
+        wire = compress.compress(cfg, TREE, KEY)
+        for k in TREE:
+            n = TREE[k].size
+            kk = budget.topk_count(n, ratio)
+            w = np.asarray(wire[k]).reshape(-1)
+            x = np.asarray(TREE[k]).reshape(-1)
+            nz = np.nonzero(w)[0]
+            assert len(nz) <= kk
+            np.testing.assert_array_equal(w[nz], x[nz])  # values unchanged
+            # kept entries are the largest-|.| ones
+            if len(nz):
+                assert np.abs(x[nz]).min() >= np.partition(
+                    np.abs(x), -kk)[-kk] - 1e-7
+        # payload is strictly smaller than dense
+        assert budget.payload_bytes(cfg, TREE) < budget.dense_bytes(TREE)
+
+    @pytest.mark.parametrize("name,bits", [("int8", 8), ("int4", 4)])
+    def test_quantized_error_bounded_by_scale(self, name, bits):
+        cfg = CommConfig(compressor=name)
+        wire = compress.compress(cfg, TREE, KEY)
+        qmax = 127.0 if bits == 8 else 7.0
+        for k in TREE:
+            x = np.asarray(TREE[k], np.float32)
+            scale = np.abs(x).max() / qmax  # single block at this size
+            err = np.abs(np.asarray(wire[k], np.float32) - x)
+            assert err.max() <= scale + 1e-6  # stochastic floor: < 1 step
+        dense = budget.dense_bytes(TREE)
+        payload = budget.payload_bytes(cfg, TREE)
+        assert payload < dense
+        # byte-accurate: n*b/8 (+ one f32 scale per block per leaf)
+        expect = sum(-(-x.size * bits // 8) + 4 for x in TREE.values())
+        assert payload == expect
+
+    def test_compression_ratio_ordering(self):
+        ratios = [budget.dense_bytes(TREE) / budget.payload_bytes(
+            CommConfig(compressor=c, topk_ratio=0.05), TREE)
+            for c in ("identity", "int8", "int4", "topk")]
+        ident, int8, int4, topk = ratios
+        assert ident == 1.0
+        assert 3.5 < int8 <= 4.0       # ~4x plus scale overhead
+        assert 7.0 < int4 <= 8.0
+        assert topk > int4             # 5% topk beats 4-bit
+
+
+class TestErrorFeedback:
+    def _run_compressed_sgd(self, cfg, steps=60, lr=0.2):
+        """1-worker quadratic: min ||x - t||^2, uplink-compressed updates
+        applied to a server copy with error feedback."""
+        t = jnp.asarray([1.0, -2.0, 0.5, 3.0, -0.7, 0.1, 2.2, -1.4])
+        x_server = jnp.zeros(8)
+        x_local = jnp.zeros(8)
+        res = compress.init_residual({"x": x_local})
+        key = KEY
+        for s in range(steps):
+            key, k = jax.random.split(key)
+            delta = {"x": -lr * 2.0 * (x_local - t)}
+            wire, res = compress.compress_with_ef(cfg, delta, res, k)
+            x_server = x_server + wire["x"]
+            x_local = x_local + delta["x"]  # worker keeps its exact step
+        return x_server, x_local, res
+
+    @pytest.mark.parametrize("comp", ["topk", "int8", "int4"])
+    def test_residual_telescopes_to_uncompressed(self, comp):
+        cfg = CommConfig(compressor=comp, topk_ratio=0.25)
+        x_server, x_local, res = self._run_compressed_sgd(cfg)
+        # telescoping: server = sum of wires = sum of deltas - residual
+        np.testing.assert_allclose(np.asarray(x_server + res["x"]),
+                                   np.asarray(x_local), rtol=1e-5,
+                                   atol=1e-5)
+        # and the compressed trajectory lands near the optimum
+        np.testing.assert_allclose(np.asarray(x_server),
+                                   np.asarray(x_local), atol=0.15)
+
+    def test_no_error_feedback_drops_error(self):
+        cfg = CommConfig(compressor="topk", topk_ratio=0.25,
+                         error_feedback=False)
+        _, _, res = self._run_compressed_sgd(cfg, steps=5)
+        np.testing.assert_array_equal(np.asarray(res["x"]), 0.0)
+
+    def test_select_residual_only_advances_selected(self):
+        old = {"x": jnp.ones((4, 3))}
+        new = {"x": jnp.full((4, 3), 7.0)}
+        mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+        out = compress.select_residual(mask, new, old)
+        np.testing.assert_array_equal(np.asarray(out["x"][:, 0]),
+                                      [7.0, 1.0, 7.0, 1.0])
+
+
+class TestChannel:
+    def _deltas(self, C=4, n=6):
+        d = jax.random.normal(KEY, (C, n))
+        return {"x": d}
+
+    def test_ideal_is_masked_mean(self):
+        cfg = CommConfig()
+        g = {"x": jnp.zeros(6)}
+        wire = self._deltas()
+        mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+        out, mask_eff = channel.receive(cfg, g, wire, mask, KEY)
+        np.testing.assert_array_equal(np.asarray(mask_eff), np.asarray(mask))
+        want = np.asarray(wire["x"])[[0, 2, 3]].mean(axis=0)
+        np.testing.assert_allclose(np.asarray(out["x"]), want, rtol=1e-6)
+
+    def test_erasure_preserves_masked_mean_normalization(self):
+        """A dropped upload must fall out of Eq. 7's mean: the denominator
+        is the survivor count, not the selected count."""
+        cfg = CommConfig(channel="erasure", drop_prob=0.5)
+        g = {"x": jnp.zeros(6)}
+        wire = self._deltas()
+        mask = jnp.ones((4,))
+        seen_partial = False
+        key = KEY
+        for s in range(30):
+            key, k = jax.random.split(key)
+            out, mask_eff = channel.receive(cfg, g, wire, mask, k)
+            surv = np.asarray(mask_eff).astype(bool)
+            if 0 < surv.sum() < 4:
+                seen_partial = True
+                want = np.asarray(wire["x"])[surv].mean(axis=0)
+                np.testing.assert_allclose(np.asarray(out["x"]), want,
+                                           rtol=1e-5)
+            if surv.sum() == 0:  # all lost: w_t unchanged, not corrupted
+                np.testing.assert_array_equal(np.asarray(out["x"]), 0.0)
+        assert seen_partial
+
+    def test_awgn_noise_scales_with_snr(self):
+        g = {"x": jnp.zeros(512)}
+        wire = {"x": jnp.broadcast_to(
+            jax.random.normal(KEY, (512,)), (2, 512))}
+        mask = jnp.ones((2,))
+        clean, _ = channel.receive(CommConfig(), g, wire, mask, KEY)
+        errs = {}
+        for snr in (0.0, 20.0):
+            out, _ = channel.receive(
+                CommConfig(channel="awgn", snr_db=snr), g, wire, mask, KEY)
+            errs[snr] = float(jnp.abs(out["x"] - clean["x"]).max())
+        assert errs[20.0] < errs[0.0]
+        assert errs[20.0] > 0.0
+
+    def test_byzantine_sign_flip_corrupts_last_workers(self):
+        cfg = CommConfig(byzantine=2)
+        prev = {"x": jnp.zeros((5, 3))}
+        new = {"x": jnp.ones((5, 3))}
+        out = channel.corrupt_local_updates(cfg, prev, new, KEY)
+        np.testing.assert_array_equal(np.asarray(out["x"][:3]), 1.0)
+        np.testing.assert_array_equal(np.asarray(out["x"][3:]), -1.0)
+
+
+class TestEngineIntegration:
+    def _run(self, algorithm, comm, rounds=8, C=8, seed=0):
+        din, L = 6, 3
+        key = jax.random.PRNGKey(seed)
+        w_true = jax.random.normal(key, (din, L))
+        xs = jax.random.normal(jax.random.fold_in(key, 1), (C, 64, din))
+        ys = jnp.argmax(jnp.einsum("cnd,dl->cnl", xs, w_true), axis=-1)
+        gx = jax.random.normal(jax.random.fold_in(key, 2), (128, din))
+        gy = jnp.argmax(gx @ w_true, axis=-1)
+
+        def init(k):
+            return {"w": 0.01 * jax.random.normal(k, (din, L)),
+                    "b": jnp.zeros((L,))}
+
+        def loss_fn(p, x, y):
+            logits = x @ p["w"] + p["b"]
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y[..., None], -1).mean()
+
+        cfg = MdslConfig(algorithm=algorithm, local_epochs=2, batch_size=32,
+                         hp=PsoHyperParams(learning_rate=0.3,
+                                           velocity_clip=0.1), comm=comm)
+        state = mdsl.init_state(jax.random.fold_in(key, 3), init, C,
+                                eta=jnp.zeros((C,)))
+        n_params = mdsl.count_params(state.global_params)
+        hist = []
+        for r in range(rounds):
+            state, m = mdsl.mdsl_round(
+                state, xs, ys, gx, gy, jax.random.fold_in(key, 100 + r),
+                loss_fn=loss_fn, eval_fn=loss_fn, cfg=cfg,
+                n_params=n_params)
+            hist.append(m)
+        acc = float((jnp.argmax(
+            gx @ state.global_params["w"] + state.global_params["b"],
+            axis=-1) == gy).mean())
+        return state, hist, acc, n_params
+
+    def test_default_comm_matches_seed_accounting(self):
+        _, hist, acc, n = self._run("mdsl", CommConfig())
+        for m in hist:
+            assert float(m.bytes_up) == pytest.approx(
+                float(m.selected_count) * n * 4)
+            assert float(m.delivered_count) == float(m.selected_count)
+            assert float(m.compression_ratio) == 1.0
+        assert acc > 0.5
+
+    def test_compressed_bytes_below_dense_and_still_learns(self):
+        comm = CommConfig(compressor="topk", topk_ratio=0.25)
+        _, hist, acc, n = self._run("mdsl", comm)
+        _, _, acc0, _ = self._run("mdsl", CommConfig())
+        for m in hist:
+            assert float(m.bytes_up) < float(m.selected_count) * n * 4
+        assert acc > acc0 - 0.15  # compressed run stays in the same league
+
+    def test_erasure_round_with_all_drops_is_safe(self):
+        comm = CommConfig(channel="erasure", drop_prob=0.9)
+        state, hist, _, _ = self._run("mdsl", comm, rounds=4)
+        for m in hist:
+            assert float(m.delivered_count) <= float(m.selected_count)
+        for leaf in jax.tree.leaves(state.global_params):
+            assert bool(jnp.isfinite(leaf).all())
+
+    def test_byzantine_degrades_fedavg_more_than_mdsl(self):
+        """CB-DSL's claim at toy scale: function-value selection rejects
+        Byzantine workers, averaging over everyone does not."""
+        comm = CommConfig(byzantine=2, byzantine_mode="sign_flip")
+        _, _, acc_fed, _ = self._run("fedavg", comm, rounds=8)
+        _, hist, acc_mdsl, _ = self._run("mdsl", comm, rounds=8)
+        assert acc_mdsl > acc_fed
+        # after warm-up, selection should shut the byzantine workers out
+        late_masks = np.stack([np.asarray(m.mask) for m in hist[2:]])
+        assert late_masks[:, -2:].mean() < late_masks[:, :-2].mean()
+
+
+class TestQuantPackKernel:
+    @pytest.mark.parametrize("bits", [8, 4])
+    @pytest.mark.parametrize("rows", [256, 1024])
+    def test_kernel_matches_ref_interpret(self, bits, rows):
+        from repro.kernels.quant_pack import quant_pack_2d, quant_pack_ref
+        x = jax.random.normal(jax.random.fold_in(KEY, rows), (rows, 128))
+        pk, sk = quant_pack_2d(x, jnp.int32(13), bits=bits, interpret=True)
+        pr, sr = quant_pack_ref(x, jnp.int32(13), bits=bits)
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_roundtrip_error_bound(self, bits):
+        from repro.kernels.quant_pack import (dequant_unpack_ref,
+                                              quant_pack_ref)
+        x = jax.random.normal(KEY, (512, 128))
+        packed, scales = quant_pack_ref(x, jnp.int32(5), bits=bits)
+        xh = dequant_unpack_ref(packed, scales, bits=bits)
+        qmax = 127.0 if bits == 8 else 7.0
+        step = float(jnp.abs(x).max()) / qmax
+        assert float(jnp.abs(xh - x).max()) <= step + 1e-6
+
+    def test_stochastic_rounding_unbiased(self):
+        from repro.kernels.quant_pack import quant_dequant
+        x = jnp.full((256 * 128,), 0.37)
+        errs = []
+        for seed in range(8):
+            xh = quant_dequant(x, jnp.int32(seed), bits=4)
+            errs.append(float((xh - x).mean()))
+        step = 0.37 / 7.0
+        assert abs(np.mean(errs)) < 0.05 * step

@@ -10,7 +10,11 @@ from repro.launch import hlo_costmodel
 
 def lower_text(fn, *args):
     compiled = jax.jit(fn).lower(*args).compile()
-    return compiled.as_text(), compiled.cost_analysis()
+    cost = compiled.cost_analysis()
+    # older jax returns one dict per device/computation
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return compiled.as_text(), cost
 
 
 class TestDotFlops:

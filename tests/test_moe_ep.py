@@ -20,6 +20,17 @@ from repro.models.moe_ep import _pack
 ROOT = Path(__file__).resolve().parents[1]
 
 
+def _subprocess_env():
+    """Inherit the environment (JAX_PLATFORMS=cpu etc. — a bare env
+    makes jax probe for TPUs for minutes) but pin PYTHONPATH and drop
+    any outer XLA_FLAGS so the script controls the device count."""
+    import os
+
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return env
+
+
 class TestPack:
     def test_pack_roundtrip_no_drops(self):
         ids = jnp.array([2, 0, 1, 2, 0, 1, 1, 3])
@@ -74,7 +85,8 @@ EQUIV_SCRIPT = textwrap.dedent("""
         def f(p, x):
             with use_rules(rules, mesh):
                 return moe.moe_apply(p, x, cfg)
-        with jax.set_mesh(mesh):
+        # jax.set_mesh is new-API; old jax uses the Mesh context manager
+        with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
             y, aux = jax.jit(f)(params, x)
         outs[name] = (np.asarray(y, np.float32), float(aux))
 
@@ -92,7 +104,7 @@ EQUIV_SCRIPT = textwrap.dedent("""
 def test_ep_matches_dense_dispatch_8dev():
     res = subprocess.run(
         [sys.executable, "-c", EQUIV_SCRIPT],
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        env=_subprocess_env(),
         capture_output=True, text=True, timeout=600)
     assert "EP-EQUIV-OK" in res.stdout, res.stdout + res.stderr
 
@@ -127,7 +139,7 @@ def test_ep_grad_flows_8dev():
                 y, aux = moe.moe_apply(p, x, cfg)
             return (y.astype(jnp.float32) ** 2).mean() + 0.01 * aux
 
-        with jax.set_mesh(mesh):
+        with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
             g = jax.jit(jax.grad(loss))(params, x)
         total = sum(float(jnp.abs(l.astype(jnp.float32)).sum())
                     for l in jax.tree.leaves(g))
@@ -138,6 +150,6 @@ def test_ep_grad_flows_8dev():
     """)
     res = subprocess.run(
         [sys.executable, "-c", grad_script],
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+        env=_subprocess_env(),
         capture_output=True, text=True, timeout=600)
     assert "EP-GRAD-OK" in res.stdout, res.stdout + res.stderr
