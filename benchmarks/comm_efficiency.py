@@ -2,15 +2,25 @@
 
 FedAvg uploads C dense models per round; M-DSL uploads only the Eq.-6
 selected subset — and with `repro.comm` the payload itself shrinks
-(top-k / int8 / int4 with error feedback). This benchmark sweeps
-algorithms x compressors and reports accuracy-vs-bytes trade-off
-curves: total uplink bytes, rounds-to-target-accuracy, and the byte
-cost of reaching the target.
+(top-k / int8 / int4 with error feedback), the downlink broadcast can
+be quantized with PS-side error feedback, and the PS can assign wire
+tiers per worker from the Eq.-5 rank. This benchmark sweeps
+algorithms x compressors under a chosen aggregator / downlink config
+and reports accuracy-vs-total-bytes (up + down) trade-off curves, plus
+a Byzantine sweep showing where median / trimmed-mean aggregation
+retains accuracy while the masked mean degrades.
+
+Usage:
+  python -m benchmarks.comm_efficiency --aggregator median \\
+      --downlink-compressor int8
+  python -m benchmarks.comm_efficiency --full --byzantine 3
 """
 from __future__ import annotations
 
+import argparse
+
 from benchmarks.common import print_table, save_record
-from repro.comm import CommConfig
+from repro.comm import AGGREGATORS, COMPRESSORS, CommConfig
 from repro.launch.train import run_paper_experiment
 
 SWEEP = [
@@ -28,30 +38,90 @@ def rounds_to(acc_curve: list[float], target: float) -> int | None:
     return None
 
 
-def bytes_to(acc_curve: list[float], bytes_up: list[float],
+def bytes_to(acc_curve: list[float], bytes_total: list[float],
              target: float) -> float | None:
     total = 0.0
-    for a, b in zip(acc_curve, bytes_up):
+    for a, b in zip(acc_curve, bytes_total):
         total += b
         if a >= target:
             return total
     return None
 
 
+def _run_one(algo: str, comm: CommConfig, *, rounds: int, workers: int,
+             width: int, quick: bool, dataset: str, seed: int) -> dict:
+    r = run_paper_experiment(
+        algorithm=algo, case="noniid1", dataset=dataset, rounds=rounds,
+        num_workers=workers, width_mult=width, local_epochs=2,
+        n_local=256 if quick else 512, lr=0.05 if quick else 0.01,
+        velocity_clip=0.1, seed=seed, comm=comm, verbose=False)
+    r["total_bytes"] = r["total_bytes_up"] + r["total_bytes_down"]
+    r["bytes_total"] = [u + d for u, d in zip(r["bytes_up"],
+                                              r["bytes_down"])]
+    return r
+
+
+def byzantine_sweep(*, rounds: int, workers: int, width: int, quick: bool,
+                    dataset: str, seed: int, byzantine: int,
+                    comm: CommConfig) -> dict:
+    """Robust-aggregation comparison under attack: FedAvg (every worker
+    aggregated — the worst-case exposure) with `byzantine` adversarial
+    workers, across Eq.-7 aggregators. Selection-based M-DSL is the
+    paper's defense; median / trimmed mean are the aggregation-level
+    defense that also protects the no-selection baseline."""
+    # a trimmed mean only tolerates what it trims: cut at least the
+    # attacked fraction from each end
+    trim = min(max(comm.trim_ratio, byzantine / workers), 0.45)
+    attack = comm._replace(byzantine=byzantine, byzantine_mode="gaussian",
+                           byzantine_scale=25.0, trim_ratio=trim)
+    out = {"byzantine": byzantine, "attack": attack._asdict(), "runs": {}}
+    rows = []
+    for agg in AGGREGATORS:
+        r = _run_one("fedavg", attack._replace(aggregator=agg),
+                     rounds=rounds, workers=workers, width=width,
+                     quick=quick, dataset=dataset, seed=seed)
+        out["runs"][agg] = {"final_acc": r["final_acc"],
+                            "best_acc": r["best_acc"], "acc": r["acc"],
+                            "total_bytes": r["total_bytes"]}
+        rows.append([f"fedavg+{agg}", f"{r['final_acc']:.3f}",
+                     f"{r['best_acc']:.3f}",
+                     f"{r['total_bytes'] / 2**20:.2f}MiB"])
+    # the paper's selection defense, for reference: plain-mean Eq. 7 so
+    # the row isolates selection (not selection + robust aggregation)
+    r = _run_one("mdsl", attack._replace(aggregator="mean"), rounds=rounds,
+                 workers=workers, width=width, quick=quick, dataset=dataset,
+                 seed=seed)
+    out["runs"]["mdsl_selection"] = {"final_acc": r["final_acc"],
+                                     "best_acc": r["best_acc"],
+                                     "acc": r["acc"],
+                                     "total_bytes": r["total_bytes"]}
+    rows.append(["mdsl+mean(sel.)", f"{r['final_acc']:.3f}",
+                 f"{r['best_acc']:.3f}",
+                 f"{r['total_bytes'] / 2**20:.2f}MiB"])
+    print_table(["defense", "final_acc", "best_acc", "total bytes"], rows,
+                f"Byzantine sweep ({byzantine} gaussian attackers)")
+    return out
+
+
 def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
-        algorithms: tuple[str, ...] = ("fedavg", "mdsl")) -> dict:
+        algorithms: tuple[str, ...] = ("fedavg", "mdsl"),
+        aggregator: str = "mean", downlink_compressor: str = "identity",
+        adaptive_bits: bool = False, byzantine: int = 2) -> dict:
     rounds = 8 if quick else 20
     width = 2 if quick else 8
     workers = 10 if quick else 50
+    base = CommConfig(aggregator=aggregator,
+                      downlink_compressor=downlink_compressor,
+                      adaptive_bits=adaptive_bits).validate()
+    sweep = [(name, base._replace(compressor=c.compressor,
+                                  topk_ratio=c.topk_ratio))
+             for name, c in SWEEP]
+    kw = dict(rounds=rounds, workers=workers, width=width, quick=quick,
+              dataset=dataset, seed=seed)
     recs = {}
     for algo in algorithms:
-        for cname, comm in SWEEP:
-            recs[(algo, cname)] = run_paper_experiment(
-                algorithm=algo, case="noniid1", dataset=dataset,
-                rounds=rounds, num_workers=workers, width_mult=width,
-                local_epochs=2, n_local=256 if quick else 512,
-                lr=0.05 if quick else 0.01, velocity_clip=0.1, seed=seed,
-                comm=comm, verbose=False)
+        for cname, comm in sweep:
+            recs[(algo, cname)] = _run_one(algo, comm, **kw)
 
     # baselines: dense FedAvg when it ran, else the first algorithm's
     # identity run (run() accepts any algorithm subset)
@@ -62,27 +132,33 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
 
     rows = []
     for (algo, cname), r in recs.items():
-        total = r["total_bytes_up"]
         rows.append([
             algo, cname, f"{r['final_acc']:.3f}",
             f"{sum(r['selected']) / rounds:.1f}/{C}",
             f"{r['compression_ratio']:.1f}x",
-            f"{total / 2**20:.2f}MiB",
+            f"{r['total_bytes_up'] / 2**20:.2f}MiB",
+            f"{r['total_bytes_down'] / 2**20:.2f}MiB",
             rounds_to(r["acc"], target) or f">{rounds}",
             (lambda b: f"{b / 2**20:.2f}MiB" if b else "-")(
-                bytes_to(r["acc"], r["bytes_up"], target))])
+                bytes_to(r["acc"], r["bytes_total"], target))])
     print_table(
         ["algorithm", "compressor", "final_acc", "uploads/round",
-         "ratio", "total up", f"rounds to {target:.2f}",
+         "ratio", "total up", "total down", f"rounds to {target:.2f}",
          f"bytes to {target:.2f}"],
-        rows, "§IV-C — communication efficiency (non-iid I), bytes on wire")
+        rows, "§IV-C — communication efficiency (non-iid I), "
+              f"bytes on wire [agg={aggregator} "
+              f"down={downlink_compressor}"
+              f"{' adaptive' if adaptive_bits else ''}]")
 
     ref_total = recs[(ref_algo, "identity")]["total_bytes_up"]
     best_key = min(
         ((k, r) for k, r in recs.items()
          if r["final_acc"] >= target),
-        key=lambda kr: kr[1]["total_bytes_up"], default=(None, None))[0]
+        key=lambda kr: kr[1]["total_bytes"], default=(None, None))[0]
     rec = {"n_params": n, "C": C, "rounds": rounds, "target_acc": target,
+           "aggregator": aggregator,
+           "downlink_compressor": downlink_compressor,
+           "adaptive_bits": adaptive_bits,
            "ref_algorithm": ref_algo, "ref_dense_bytes": ref_total}
     if "fedavg" in algorithms and "mdsl" in algorithms:
         fed_total = recs[("fedavg", "identity")]["total_bytes_up"]
@@ -106,22 +182,48 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
         best = recs[best_key]
         print(f"cheapest config reaching {target:.2f}: "
               f"{best_key[0]}+{best_key[1]} at "
-              f"{best['total_bytes_up'] / 2**20:.2f}MiB "
+              f"{best['total_bytes'] / 2**20:.2f}MiB up+down "
               f"({ref_total / max(best['total_bytes_up'], 1):.1f}x less "
-              f"than dense {ref_algo})")
+              f"uplink than dense {ref_algo})")
 
     rec.update({"sweep": {f"{a}+{c}": {
                "final_acc": r["final_acc"],
                "acc": r["acc"],
                "total_bytes_up": r["total_bytes_up"],
+               "total_bytes_down": r["total_bytes_down"],
+               "total_bytes": r["total_bytes"],
                "bytes_up": r["bytes_up"],
+               "bytes_down": r["bytes_down"],
                "compression_ratio": r["compression_ratio"],
                "selected": r["selected"],
                "delivered": r["delivered"],
            } for (a, c), r in recs.items()}})
+    if byzantine > 0:
+        rec["byzantine_sweep"] = byzantine_sweep(byzantine=byzantine,
+                                                 comm=base, **kw)
     save_record("comm_efficiency", rec)
     return rec
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep (C=50, 20 rounds)")
+    ap.add_argument("--dataset", default="mnist_like")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--aggregator", default="mean",
+                    choices=list(AGGREGATORS))
+    ap.add_argument("--downlink-compressor", default="identity",
+                    choices=list(COMPRESSORS))
+    ap.add_argument("--adaptive-bits", action="store_true")
+    ap.add_argument("--byzantine", type=int, default=2,
+                    help="attackers in the robustness sweep (0 disables)")
+    args = ap.parse_args()
+    run(quick=not args.full, dataset=args.dataset, seed=args.seed,
+        aggregator=args.aggregator,
+        downlink_compressor=args.downlink_compressor,
+        adaptive_bits=args.adaptive_bits, byzantine=args.byzantine)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -20,7 +20,6 @@ bound for attention-heavy prefill/train shapes.
 from __future__ import annotations
 
 import json
-from pathlib import Path
 
 from benchmarks.common import ARTIFACTS, print_table, save_record
 from repro.configs.base import INPUT_SHAPES, get_arch

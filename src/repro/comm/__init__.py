@@ -16,10 +16,11 @@ Both engines (`core/mdsl.py`, `core/swarm_dist.py`) thread a
 `CommConfig` through their round functions; `launch/train.py` exposes
 the flags and `benchmarks/comm_efficiency.py` sweeps the trade-off.
 """
-from repro.comm.budget import (BYZANTINE_MODES, CHANNELS, COMPRESSORS,
-                               CommConfig, CommRecord, dense_bytes,
+from repro.comm.budget import (AGGREGATORS, BYZANTINE_MODES, CHANNELS,
+                               COMPRESSORS, CommConfig, CommRecord,
+                               degrade, dense_bytes, downlink_config,
                                leaf_payload_bytes, payload_bytes,
-                               round_record, topk_count)
+                               round_record, topk_count, uplink_tiers)
 from repro.comm.channel import (corrupt_local_updates, erasure_mask,
                                 receive)
 # NOTE: the compress *function* is deliberately not re-exported — it
@@ -27,8 +28,10 @@ from repro.comm.channel import (corrupt_local_updates, erasure_mask,
 from repro.comm.compress import (compress_with_ef, init_residual,
                                  select_residual)
 
-__all__ = ["BYZANTINE_MODES", "CHANNELS", "COMPRESSORS", "CommConfig",
-           "CommRecord", "compress_with_ef", "corrupt_local_updates",
-           "dense_bytes", "erasure_mask", "init_residual",
+__all__ = ["AGGREGATORS", "BYZANTINE_MODES", "CHANNELS", "COMPRESSORS",
+           "CommConfig", "CommRecord", "compress_with_ef",
+           "corrupt_local_updates", "degrade", "dense_bytes",
+           "downlink_config", "erasure_mask", "init_residual",
            "leaf_payload_bytes", "payload_bytes", "receive",
-           "round_record", "select_residual", "topk_count"]
+           "round_record", "select_residual", "topk_count",
+           "uplink_tiers"]

@@ -10,11 +10,14 @@ Conventions (documented here, relied on by tests and benchmarks):
   * uplink payloads are counted per *transmitting* worker — a packet
     lost to erasure still consumed airtime, so `bytes_up` counts
     selected workers while `delivered` counts survivors;
-  * the downlink is the uncompressed broadcast of w_t to all C workers
-    (downlink compression is a ROADMAP open item);
+  * the downlink is the broadcast of the global update to all C
+    workers, charged at the `downlink_compressor` payload (dense model
+    bytes when "identity");
+  * dense payloads are charged at each leaf's actual `dtype.itemsize`
+    (a bf16 mesh model costs 2 bytes/param, not 4);
   * quantized payloads carry one f32 scale per kernel block
-    (`kernels/quant_pack` granularity), top-k payloads carry f32 value
-    + int32 index pairs.
+    (`kernels/quant_pack` granularity), top-k payloads carry
+    native-dtype value + int32 index pairs.
 """
 from __future__ import annotations
 
@@ -37,10 +40,11 @@ QUANT_BLOCK_ELEMS = 256 * 128
 COMPRESSORS = ("identity", "topk", "int8", "int4")
 CHANNELS = ("ideal", "erasure", "awgn")
 BYZANTINE_MODES = ("sign_flip", "gaussian")
+AGGREGATORS = ("mean", "median", "trimmed_mean")
 
 
 class CommConfig(NamedTuple):
-    """Static (hashable) uplink configuration, carried on the engine
+    """Static (hashable) wire configuration, carried on the engine
     configs and closed over by the jitted round functions."""
     compressor: str = "identity"        # see COMPRESSORS
     topk_ratio: float = 0.05            # fraction of entries kept per leaf
@@ -51,12 +55,21 @@ class CommConfig(NamedTuple):
     byzantine: int = 0                  # adversarial workers (last k of C)
     byzantine_mode: str = "sign_flip"   # see BYZANTINE_MODES
     byzantine_scale: float = 1.0        # gaussian attack std
+    aggregator: str = "mean"            # see AGGREGATORS (Eq. 7 variants)
+    trim_ratio: float = 0.1             # trimmed_mean: fraction cut per side
+    downlink_compressor: str = "identity"  # PS broadcast compression
+    adaptive_bits: bool = False         # per-worker wire tier from Eq.-5 rank
 
     def validate(self) -> "CommConfig":
         if self.compressor not in COMPRESSORS:
             raise ValueError(f"unknown compressor {self.compressor!r}")
+        if self.downlink_compressor not in COMPRESSORS:
+            raise ValueError(f"unknown downlink compressor "
+                             f"{self.downlink_compressor!r}")
         if self.channel not in CHANNELS:
             raise ValueError(f"unknown channel {self.channel!r}")
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(f"unknown aggregator {self.aggregator!r}")
         if self.byzantine_mode not in BYZANTINE_MODES:
             raise ValueError(f"unknown byzantine mode "
                              f"{self.byzantine_mode!r}")
@@ -66,6 +79,9 @@ class CommConfig(NamedTuple):
         if not 0.0 <= self.drop_prob < 1.0:
             raise ValueError(f"drop_prob must be in [0, 1), got "
                              f"{self.drop_prob}")
+        if not 0.0 <= self.trim_ratio < 0.5:
+            raise ValueError(f"trim_ratio must be in [0, 0.5), got "
+                             f"{self.trim_ratio}")
         return self
 
 
@@ -78,9 +94,9 @@ class CommRecord(NamedTuple):
     `int(mask.sum())` times the Python-int `payload_bytes(...)`, as
     launch/train.py does for its metrics JSON."""
     bytes_up: Array            # transmitted: selected x compressed payload
-    bytes_down: Array          # broadcast of w_t: C x 4n
+    bytes_down: Array          # broadcast: C x downlink payload
     delivered: Array           # uploads surviving the channel
-    compression_ratio: Array   # uncompressed payload / compressed payload
+    compression_ratio: Array   # uncompressed payload / mean uplink payload
 
 
 def topk_count(n: int, ratio: float) -> int:
@@ -92,12 +108,15 @@ def _quant_blocks(n: int) -> int:
     return -(-n // QUANT_BLOCK_ELEMS)
 
 
-def leaf_payload_bytes(cfg: CommConfig, n: int) -> int:
-    """Exact uplink bytes for one n-element f32 leaf."""
+def leaf_payload_bytes(cfg: CommConfig, n: int,
+                       itemsize: int = FLOAT_BYTES) -> int:
+    """Exact uplink bytes for one n-element leaf of `itemsize`-byte
+    dtype. Quantized payloads are dtype-independent (b bits/entry plus
+    scales); dense and top-k values ship in the native dtype."""
     if cfg.compressor == "identity":
-        return n * FLOAT_BYTES
+        return n * itemsize
     if cfg.compressor == "topk":
-        return topk_count(n, cfg.topk_ratio) * (FLOAT_BYTES + INDEX_BYTES)
+        return topk_count(n, cfg.topk_ratio) * (itemsize + INDEX_BYTES)
     if cfg.compressor == "int8":
         return n + _quant_blocks(n) * SCALE_BYTES
     if cfg.compressor == "int4":
@@ -108,24 +127,72 @@ def leaf_payload_bytes(cfg: CommConfig, n: int) -> int:
 def payload_bytes(cfg: CommConfig, params: PyTree) -> int:
     """Per-worker uplink payload for a whole model pytree. Shapes are
     static under jit, so this is a Python int usable inside traced code."""
-    return sum(leaf_payload_bytes(cfg, x.size)
+    return sum(leaf_payload_bytes(cfg, x.size, jnp.dtype(x.dtype).itemsize)
                for x in jax.tree.leaves(params))
 
 
 def dense_bytes(params: PyTree) -> int:
-    """Uncompressed f32 payload (the seed repo's implicit unit)."""
-    return sum(x.size for x in jax.tree.leaves(params)) * FLOAT_BYTES
+    """Uncompressed payload at each leaf's actual dtype width (bf16
+    leaves are charged 2 bytes/param; the seed repo assumed f32)."""
+    return sum(x.size * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(params))
+
+
+def downlink_config(cfg: CommConfig) -> CommConfig:
+    """The PS-side broadcast wire config: the downlink compressor with
+    PS error feedback always on (one residual, telescoping the
+    quantized global deltas — rounds.downlink)."""
+    return cfg._replace(compressor=cfg.downlink_compressor,
+                        error_feedback=True)
+
+
+def degrade(cfg: CommConfig) -> CommConfig:
+    """One wire tier down in bits: identity -> int8 -> int4; top-k
+    halves its keep ratio. int4 is already the floor."""
+    if cfg.compressor == "identity":
+        return cfg._replace(compressor="int8")
+    if cfg.compressor == "int8":
+        return cfg._replace(compressor="int4")
+    if cfg.compressor == "topk":
+        return cfg._replace(topk_ratio=cfg.topk_ratio / 2.0)
+    return cfg
+
+
+def uplink_tiers(cfg: CommConfig) -> tuple[CommConfig, ...]:
+    """Per-worker CommConfig resolution (adaptive bit allocation): the
+    base config plus, when `adaptive_bits` is set, the degraded tier the
+    PS assigns to workers ranked in the worse Eq.-5 half."""
+    if not cfg.adaptive_bits:
+        return (cfg,)
+    low = degrade(cfg)
+    return (cfg,) if low == cfg else (cfg, low)
 
 
 def round_record(cfg: CommConfig, params: PyTree, num_workers: int,
-                 mask: Array, mask_eff: Array) -> CommRecord:
+                 mask: Array, mask_eff: Array,
+                 tier_lo: Array = None) -> CommRecord:
     """Wire accounting for one round: `mask` is the Eq.-6 selection,
-    `mask_eff` the post-channel survivor mask."""
-    payload = payload_bytes(cfg, params)
+    `mask_eff` the post-channel survivor mask, `tier_lo` the (C,)
+    indicator of workers on the degraded adaptive tier (None when the
+    fleet shares one wire config)."""
+    tiers = uplink_tiers(cfg)
     dense = dense_bytes(params)
+    p_hi = payload_bytes(tiers[0], params)
+    if tier_lo is None or len(tiers) == 1:
+        bytes_up = mask.sum() * p_hi
+        mean_payload = p_hi
+    else:
+        p_lo = payload_bytes(tiers[1], params)
+        bytes_up = ((mask * (1.0 - tier_lo)).sum() * p_hi
+                    + (mask * tier_lo).sum() * p_lo)
+        n_lo = tier_lo.sum()         # degraded-tier count, per the actual
+        #                              assignment (rounds.tier_masks)
+        mean_payload = (p_hi * (num_workers - n_lo) + p_lo * n_lo
+                        ) / num_workers
+    bytes_down = num_workers * payload_bytes(downlink_config(cfg), params)
     return CommRecord(
-        bytes_up=mask.sum() * payload,
-        bytes_down=jnp.asarray(num_workers * dense, jnp.float32),
+        bytes_up=bytes_up,
+        bytes_down=jnp.asarray(bytes_down, jnp.float32),
         delivered=mask_eff.sum(),
-        compression_ratio=jnp.asarray(dense / payload, jnp.float32),
+        compression_ratio=jnp.asarray(dense / mean_payload, jnp.float32),
     )

@@ -65,8 +65,10 @@ def erasure_mask(cfg: CommConfig, mask: Array, key: Array) -> Array:
 
 def receive(cfg: CommConfig, global_params: PyTree, wire_deltas: PyTree,
             mask: Array, key: Array) -> tuple[PyTree, Array]:
-    """Uplink + Eq. 7: push the selected workers' wire deltas through
-    the channel and fold the received mean into the global model.
+    """Uplink channel + Eq.-7 Aggregate stage: push the selected
+    workers' wire deltas through the channel and fold the aggregate
+    (cfg.aggregator: masked mean, coordinate-wise median, or trimmed
+    mean) into the global model.
 
     wire_deltas: pytree with leading worker dim C (decoded payloads from
     `compress`); mask: (C,) Eq.-6 selection. Returns (w_{t+1}, mask_eff)
@@ -74,6 +76,9 @@ def receive(cfg: CommConfig, global_params: PyTree, wire_deltas: PyTree,
     """
     ekey, nkey = jax.random.split(key)
     mask_eff = erasure_mask(cfg, mask, ekey)
+    if cfg.aggregator != "mean":
+        return _robust_receive(cfg, global_params, wire_deltas, mask_eff,
+                               nkey), mask_eff
     denom = jnp.maximum(mask_eff.sum(), 1.0)
 
     g_leaves, treedef = jax.tree.flatten(global_params)
@@ -91,3 +96,48 @@ def receive(cfg: CommConfig, global_params: PyTree, wire_deltas: PyTree,
                                               s.shape, jnp.float32)
         out.append((g + s / denom).astype(g.dtype))
     return jax.tree.unflatten(treedef, out), mask_eff
+
+
+def _robust_receive(cfg: CommConfig, global_params: PyTree,
+                    wire_deltas: PyTree, mask_eff: Array,
+                    nkey: Array) -> PyTree:
+    """Byzantine-robust Eq.-7 variants (CB-DSL, arXiv:2208.05578):
+    coordinate-wise median / trimmed mean over the delivered deltas.
+
+    Robust statistics need the individual uploads at the PS, so AWGN
+    here is per-upload digital decode noise, not the analog
+    superposition of the mean path. Non-delivered workers are masked to
+    +inf and sorted to the top; the traced survivor count k picks the
+    order statistics, so erasure composes with robustness.
+    """
+    k = mask_eff.sum().astype(jnp.int32)
+    g_leaves, treedef = jax.tree.flatten(global_params)
+    d_leaves = jax.tree.leaves(wire_deltas)
+    out = []
+    for i, (g, d) in enumerate(zip(g_leaves, d_leaves)):
+        C = d.shape[0]
+        d = d.astype(jnp.float32)
+        m = mask_eff.reshape((-1,) + (1,) * (d.ndim - 1))
+        if cfg.channel == "awgn":
+            n_el = jnp.maximum(mask_eff.sum(), 1.0) * (d.size // C)
+            sig_rms = jnp.sqrt((m * d * d).sum() / n_el)
+            sigma = sig_rms * (10.0 ** (-cfg.snr_db / 20.0))
+            d = d + sigma * jax.random.normal(jax.random.fold_in(nkey, i),
+                                              d.shape, jnp.float32)
+        svals = jnp.sort(jnp.where(m > 0, d, jnp.inf), axis=0)
+        if cfg.aggregator == "median":
+            lo = jnp.maximum(k - 1, 0) // 2
+            hi = jnp.maximum(k - 1, 0) - lo
+            agg = 0.5 * (jax.lax.dynamic_index_in_dim(svals, lo, 0, False)
+                         + jax.lax.dynamic_index_in_dim(svals, hi, 0,
+                                                        False))
+        else:  # trimmed_mean: cut t of the k survivors from each end
+            t = (cfg.trim_ratio * k.astype(jnp.float32)).astype(jnp.int32)
+            t = jnp.minimum(t, jnp.maximum(k - 1, 0) // 2)
+            idx = jnp.arange(C).reshape((-1,) + (1,) * (d.ndim - 1))
+            keep = (idx >= t) & (idx < k - t)
+            cnt = jnp.maximum((k - 2 * t).astype(jnp.float32), 1.0)
+            agg = jnp.where(keep, svals, 0.0).sum(axis=0) / cnt
+        agg = jnp.where(k > 0, agg, 0.0)  # all-lost round: w_t unchanged
+        out.append((g + agg).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import math
-from typing import Optional
 
 # block kinds understood by models/transformer.py
 ATTN = "attn"            # full causal GQA attention

@@ -10,12 +10,13 @@ and (b) the selection rule:
   mdsl      PSO-hybrid, multi-worker selection with
             theta = tau*F + (1-tau)*eta  (the contribution)
 
-The engine is written as a single jit-able round function: worker state is
-stacked over a leading C dim and local training is vmap'ed, so the same
-code drives (1) the CPU paper-reproduction (C=50, tiny CNN) and (2) the
-mesh-distributed production trainer (`core/swarm_dist.py`), where the C
-dim is sharded over mesh worker axes and Eq. 7's masked mean lowers to an
-all-reduce.
+The round is a configuration of `core/rounds.py`'s stage pipeline:
+this module supplies only the LocalUpdate stage (PSO-hybrid local
+epochs, vmap'ed over the leading C dim) and the WorkerState-shaped
+best tracking; ScoreSelect, Uplink, Aggregate, Downlink, and the byte
+accounting are the shared stages in `rounds.RoundPipeline`. The same
+pipeline drives the mesh-distributed production trainer
+(`core/swarm_dist.py`), where the worker dim is sharded over mesh axes.
 
 Granularity note (DESIGN.md §1): Algorithm 1 applies Eq. 8 once per
 communication round while §V-A trains 4 local epochs per round. We
@@ -38,18 +39,21 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm import budget as comm_budget
 from repro.comm import channel as comm_channel
 from repro.comm import compress as comm_compress
 from repro.comm.budget import CommConfig
-from repro.core import pso, selection
+from repro.core import pso, rounds, selection
 from repro.core.pso import (GlobalBest, PsoCoefficients, PsoHyperParams,
                             WorkerState)
+from repro.core.rounds import RoundTelemetry
 from repro.core.selection import SelectionState
 
 Array = jax.Array
 PyTree = Any
 LossFn = Callable[[PyTree, Array, Array], Array]  # (params, x, y) -> scalar
+
+# pre-refactor alias: the paper path's metrics are the unified telemetry
+RoundMetrics = RoundTelemetry
 
 
 class MdslConfig(NamedTuple):
@@ -59,7 +63,7 @@ class MdslConfig(NamedTuple):
     batch_size: int = 64             # paper §V-A
     hp: PsoHyperParams = PsoHyperParams()
     pso_every_step: bool = False     # per-step Eq. 8 (unit tests)
-    comm: CommConfig = CommConfig()  # uplink compression + channel
+    comm: CommConfig = CommConfig()  # wire: compression/channel/aggregation
 
 
 class SwarmTrainState(NamedTuple):
@@ -71,20 +75,8 @@ class SwarmTrainState(NamedTuple):
     sel: SelectionState
     round_idx: Array                 # t
     eta: Array                       # (C,) non-iid degrees (static over rounds)
-    residual: PyTree                 # (C, ...) error-feedback state
-
-
-class RoundMetrics(NamedTuple):
-    eval_losses: Array               # (C,) F_{i,t+1} on D_g
-    theta: Array                     # (C,)
-    mask: Array                      # (C,) selection indicator s_{i,t}
-    global_loss: Array               # F(w_{t+1}; D_g)
-    uploaded_params: Array           # n * sum_i s_i (paper §IV-C)
-    selected_count: Array
-    bytes_up: Array                  # wire bytes transmitted this round
-    bytes_down: Array                # broadcast of w_t to all C workers
-    delivered_count: Array           # uploads surviving the channel
-    compression_ratio: Array         # dense payload / compressed payload
+    residual: PyTree                 # (C, ...) uplink error-feedback state
+    ps_residual: PyTree              # PS-side downlink error-feedback state
 
 
 def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
@@ -102,6 +94,7 @@ def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
         round_idx=jnp.zeros((), jnp.int32),
         eta=eta,
         residual=comm_compress.init_residual(stacked),
+        ps_residual=rounds.init_ps_residual(params),
     )
 
 
@@ -172,32 +165,22 @@ def _local_update(state: WorkerState, gbest_params: PyTree, data_x: Array,
                           velocity=v_next)
 
 
-def _selection_mask(algorithm: str, theta: Array,
-                    sel: SelectionState) -> tuple[Array, SelectionState]:
-    if algorithm == "fedavg":
-        return jnp.ones_like(theta), sel._replace(prev_theta_mean=theta.mean())
-    if algorithm == "dsl":  # vanilla DSL: single best worker [9]
-        mask = jax.nn.one_hot(jnp.argmin(theta), theta.shape[0],
-                              dtype=jnp.float32)
-        return mask, sel._replace(prev_theta_mean=theta.mean())
-    # multi_dsl / mdsl: Eq. 6 adaptive threshold
-    return selection.select_workers(theta, sel)
-
-
 @functools.partial(jax.jit,
                    static_argnames=("loss_fn", "eval_fn", "cfg", "n_params"))
 def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
                eval_x: Array, eval_y: Array, key: Array, *,
                loss_fn: LossFn, eval_fn: LossFn, cfg: MdslConfig,
-               n_params: int) -> tuple[SwarmTrainState, RoundMetrics]:
+               n_params: int) -> tuple[SwarmTrainState, RoundTelemetry]:
     """One communication round (Algorithm 1 body).
 
     data_x/data_y: stacked local datasets (C, n_i, ...); eval_x/eval_y:
-    the shared synthetic D_g. Returns the next state and round metrics.
+    the shared synthetic D_g. Returns the next state and round telemetry.
     """
     C = data_x.shape[0]
-    algorithm = cfg.algorithm
-    use_pso = algorithm != "fedavg"
+    use_pso = cfg.algorithm != "fedavg"
+    pipe = rounds.RoundPipeline(algorithm=cfg.algorithm, comm=cfg.comm,
+                                num_workers=C, tau=cfg.tau,
+                                n_params=n_params)
 
     ckey, tkey, bkey, qkey, wkey = jax.random.split(key, 5)
     # per-WORKER coefficient draws (classic PSO: each particle has its
@@ -207,7 +190,7 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
     coeffs = jax.vmap(pso.sample_coefficients)(jax.random.split(ckey, C))
     lr = pso.decayed_lr(cfg.hp, state.round_idx)
 
-    # --- Algorithm 1 lines 3-4: local bests, local update, F_{i,t+1}. ---
+    # --- LocalUpdate (Algorithm 1 lines 3-4): bests, update, F_{i,t+1}. ---
     eval_on_dg = lambda p: eval_fn(p, eval_x, eval_y)
     pre_losses = jax.vmap(eval_on_dg)(state.workers.params)
     workers = jax.vmap(pso.update_local_best)(state.workers, pre_losses)
@@ -227,42 +210,31 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
 
     eval_losses = jax.vmap(eval_on_dg)(workers.params)
 
-    # --- Lines 5-6: scores + selection (Eqs. 4-6). ---
-    if algorithm == "mdsl":
-        theta = selection.tradeoff_scores(eval_losses, state.eta, cfg.tau)
-    else:  # fedavg / dsl / multi_dsl score on loss only (tau = 1)
-        theta = eval_losses
-    mask, sel = _selection_mask(algorithm, theta, state.sel)
+    # --- ScoreSelect (lines 5-6, Eqs. 4-6). ---
+    theta, mask, theta_mean = pipe.select(eval_losses, state.eta,
+                                          state.sel.prev_theta_mean)
 
-    # --- Lines 7-9: compress, transmit, aggregate (Eq. 7 through the
-    # comm/ wire), then global best (Eq. 10). With the default
-    # CommConfig (identity/ideal) this is exactly the seed's masked
-    # delta-mean. ---
+    # --- Uplink -> Aggregate -> Downlink (lines 7-9, Eq. 7 through the
+    # wire). With the default CommConfig this is exactly the seed's
+    # masked delta-mean and a dense broadcast. ---
     delta = jax.tree.map(lambda a, b: a - b, workers.params, prev_params)
-    wire, new_residual = jax.vmap(
-        functools.partial(comm_compress.compress_with_ef, cfg.comm)
-    )(delta, state.residual, jax.random.split(qkey, C))
-    residual = comm_compress.select_residual(mask, new_residual,
-                                             state.residual)
-    global_params, mask_eff = comm_channel.receive(
-        cfg.comm, state.global_params, wire, mask, wkey)
-    rec = comm_budget.round_record(cfg.comm, state.global_params, C, mask,
-                                   mask_eff)
-    global_loss = eval_on_dg(global_params)
-    gbest = pso.update_global_best(state.gbest, global_params, global_loss)
+    out = pipe.wire(delta=delta, theta=theta, mask=mask,
+                    global_params=state.global_params,
+                    residual=state.residual, ps_residual=state.ps_residual,
+                    qkey=qkey, wkey=wkey)
 
+    # --- BestTracking (Eq. 10) + next state. ---
+    global_loss = eval_on_dg(out.global_params)
+    gbest = pso.update_global_best(state.gbest, out.global_params,
+                                   global_loss)
     next_state = SwarmTrainState(
-        workers=workers, global_params=global_params, gbest=gbest, sel=sel,
-        round_idx=state.round_idx + 1, eta=state.eta, residual=residual)
-    metrics = RoundMetrics(
-        eval_losses=eval_losses, theta=theta, mask=mask,
-        global_loss=global_loss,
-        uploaded_params=selection.uploaded_parameter_count(mask, n_params),
-        selected_count=mask.sum(), bytes_up=rec.bytes_up,
-        bytes_down=rec.bytes_down, delivered_count=rec.delivered,
-        compression_ratio=rec.compression_ratio)
-    return next_state, metrics
+        workers=workers, global_params=out.global_params, gbest=gbest,
+        sel=SelectionState(prev_theta_mean=theta_mean),
+        round_idx=state.round_idx + 1, eta=state.eta,
+        residual=out.residual, ps_residual=out.ps_residual)
+    return next_state, pipe.telemetry(losses=eval_losses, theta=theta,
+                                      mask=mask, global_loss=global_loss,
+                                      outcome=out)
 
 
-def count_params(params: PyTree) -> int:
-    return int(sum(x.size for x in jax.tree.leaves(params)))
+count_params = rounds.count_params

@@ -1,0 +1,343 @@
+"""Composable round engine: Algorithm 1 as a pipeline of pluggable stages.
+
+One communication round of every engine in this repo factors into the
+same six stages over stacked-worker pytrees (leading dim C):
+
+  LocalUpdate    engine-specific (PSO-hybrid epochs, mesh SGD steps,
+                 FedAvg deltas) — supplied by the engine, see
+                 `core/mdsl.py` / `core/swarm_dist.py`
+  ScoreSelect    Eq. 5 trade-off scores + Eq. 6 adaptive-threshold
+                 selection (`score_select`; fedavg = all-ones, dsl =
+                 single best)
+  Uplink         per-worker delta compression with error feedback and
+                 per-worker wire-tier resolution (`uplink`)
+  Aggregate      channel + Eq. 7 (`comm.channel.receive`: masked mean,
+                 coordinate-wise median, or trimmed mean)
+  Downlink       the PS broadcast of the global update, optionally
+                 quantized with PS-side error feedback (`downlink`)
+  BestTracking   Eq. 9/10 local/global best refresh (`track_local_best`
+                 / `track_global_best`)
+
+`RoundPipeline` bundles the stages with the static round configuration;
+engines instantiate it once per (algorithm, comm, C) and call
+`select` / `wire` / `telemetry`. The Eq.-7-through-the-wire block
+(compress_with_ef -> select_residual -> channel.receive -> downlink ->
+round_record) lives ONLY here — `wire_round` — so every comm feature
+(robust aggregation, downlink compression, adaptive bits, future fading
+or async stages) lands once and reaches the paper engine, the mesh
+engine, and the FedAvg baseline simultaneously.
+
+All stages are pure `(carry, ctx) -> (carry, telemetry)`-style functions
+of stacked pytrees: no Python state, jit/vmap/spmd-safe (the mesh engine
+passes `axis_name` so per-worker vmaps keep their sharding
+constraints).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import budget as comm_budget
+from repro.comm import channel as comm_channel
+from repro.comm import compress as comm_compress
+from repro.comm.budget import CommConfig
+from repro.core import selection
+from repro.core.selection import SelectionState
+
+Array = jax.Array
+PyTree = Any
+
+_DOWNLINK_SALT = 0xD0  # dkey = fold_in(qkey, salt): keeps the engines'
+#                        key-split structure (and goldens) unchanged
+
+
+class RoundTelemetry(NamedTuple):
+    """Unified per-round telemetry — the superset of the pre-refactor
+    RoundMetrics (paper path) and RoundInfo (mesh path), carried by all
+    engines so no path drops wire accounting again."""
+    losses: Array             # (C,) F_{i,t+1} on D_g
+    theta: Array              # (C,) Eq.-5 scores
+    mask: Array               # (C,) Eq.-6 selection indicator
+    global_loss: Array        # () F(w_{t+1}; D_g)
+    selected_count: Array     # () sum_i s_i
+    uploaded_params: Array    # () n * sum_i s_i (paper §IV-C legacy unit)
+    bytes_up: Array           # () wire bytes transmitted this round
+    bytes_down: Array         # () broadcast bytes (downlink-compressed)
+    delivered: Array          # () uploads surviving the channel
+    compression_ratio: Array  # () dense payload / mean uplink payload
+
+    # pre-refactor field names, kept so existing consumers read the
+    # unified record unchanged
+    @property
+    def eval_losses(self) -> Array:
+        return self.losses
+
+    @property
+    def delivered_count(self) -> Array:
+        return self.delivered
+
+
+class WireOutcome(NamedTuple):
+    """Result of the Uplink -> Aggregate -> Downlink stage chain."""
+    global_params: PyTree     # the broadcast w_{t+1} workers will see
+    residual: PyTree          # (C, ...) advanced uplink EF state
+    ps_residual: PyTree       # PS-side downlink EF state
+    mask_eff: Array           # (C,) post-channel survivor mask
+    record: comm_budget.CommRecord
+
+
+# ---------------------------------------------------------------------------
+# ScoreSelect stage
+# ---------------------------------------------------------------------------
+
+def score_select(algorithm: str, losses: Array, eta: Array, tau: float,
+                 prev_theta_mean: Array) -> tuple[Array, Array, Array]:
+    """Eq. 5 scores + the per-algorithm selection rule.
+
+    mdsl scores theta = tau*F + (1-tau)*eta; the baselines score on F
+    alone. fedavg selects everyone, dsl the single best worker,
+    multi_dsl/mdsl the Eq.-6 adaptive threshold (with the >=1
+    fallback). Returns (theta, mask, new_theta_mean)."""
+    if algorithm == "mdsl":
+        theta = selection.tradeoff_scores(losses, eta, tau)
+    else:
+        theta = losses
+    if algorithm == "fedavg":
+        return theta, jnp.ones_like(theta), theta.mean()
+    if algorithm == "dsl":
+        mask = jax.nn.one_hot(jnp.argmin(theta), theta.shape[0],
+                              dtype=jnp.float32)
+        return theta, mask, theta.mean()
+    mask, sel = selection.select_workers(
+        theta, SelectionState(prev_theta_mean=prev_theta_mean))
+    return theta, mask, sel.prev_theta_mean
+
+
+# ---------------------------------------------------------------------------
+# Uplink stage
+# ---------------------------------------------------------------------------
+
+def tier_masks(comm: CommConfig, theta: Array
+               ) -> tuple[tuple[CommConfig, ...], Array]:
+    """Per-worker wire-config resolution: with `adaptive_bits`, the PS
+    assigns the base config to the better Eq.-5 half of the fleet and
+    one tier fewer bits to the worse half. Returns (tiers, lo) where lo
+    is the (C,) degraded-tier indicator (None when uniform)."""
+    tiers = comm_budget.uplink_tiers(comm)
+    if len(tiers) == 1:
+        return tiers, None
+    C = theta.shape[0]
+    rank = jnp.argsort(jnp.argsort(theta))  # 0 = best theta
+    lo = (rank >= (C + 1) // 2).astype(jnp.float32)
+    return tiers, lo
+
+
+def uplink(comm: CommConfig, delta: PyTree, residual: PyTree, theta: Array,
+           mask: Array, key: Array, *, axis_name: Any = None
+           ) -> tuple[PyTree, PyTree, Array]:
+    """Uplink stage: compress each worker's delta (+ error feedback),
+    resolving per-worker wire tiers. Residuals advance only for workers
+    whose upload was attempted (Eq.-6 selected). Returns
+    (wire, new_residual, tier_lo)."""
+    C = theta.shape[0]
+    keys = jax.random.split(key, C)
+
+    def run(tcfg: CommConfig):
+        return jax.vmap(
+            functools.partial(comm_compress.compress_with_ef, tcfg),
+            spmd_axis_name=axis_name)(delta, residual, keys)
+
+    tiers, tier_lo = tier_masks(comm, theta)
+    if tier_lo is None:
+        wire, new_res = run(tiers[0])
+    else:
+        w_hi, r_hi = run(tiers[0])
+        w_lo, r_lo = run(tiers[1])
+
+        def pick(a, b):
+            return jax.tree.map(
+                lambda x, y: jnp.where(
+                    tier_lo.reshape((-1,) + (1,) * (x.ndim - 1)) > 0, y, x),
+                a, b)
+
+        wire, new_res = pick(w_hi, w_lo), pick(r_hi, r_lo)
+    new_residual = comm_compress.select_residual(mask, new_res, residual)
+    return wire, new_residual, tier_lo
+
+
+# ---------------------------------------------------------------------------
+# Downlink stage
+# ---------------------------------------------------------------------------
+
+def downlink(comm: CommConfig, agg_params: PyTree, prev_broadcast: PyTree,
+             ps_residual: PyTree, key: Array) -> tuple[PyTree, PyTree]:
+    """Downlink stage: broadcast the global update. With a non-identity
+    `downlink_compressor`, the PS quantizes the global delta with its
+    own error-feedback residual and workers decode broadcast = w_t +
+    decoded delta; the EF telescopes so the broadcast trajectory tracks
+    the exact aggregate (same mechanism as the uplink, one residual,
+    PS-side). Returns (broadcast_params, new_ps_residual)."""
+    if comm.downlink_compressor == "identity":
+        return agg_params, ps_residual
+    dcfg = comm_budget.downlink_config(comm)
+    delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                         agg_params, prev_broadcast)
+    wire, new_res = comm_compress.compress_with_ef(dcfg, delta, ps_residual,
+                                                   key)
+    bcast = jax.tree.map(lambda g, w: (g + w).astype(g.dtype),
+                         prev_broadcast, wire)
+    return bcast, new_res
+
+
+def init_ps_residual(params: PyTree) -> PyTree:
+    """Zero PS-side downlink error-feedback state (unstacked, f32)."""
+    return comm_compress.init_residual(params)
+
+
+# ---------------------------------------------------------------------------
+# the one Eq.-7-through-the-wire block
+# ---------------------------------------------------------------------------
+
+def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
+               mask: Array, global_params: PyTree, residual: PyTree,
+               ps_residual: PyTree, qkey: Array, wkey: Array,
+               num_workers: int, axis_name: Any = None,
+               uplink_fn: Callable = uplink,
+               aggregate_fn: Callable = comm_channel.receive,
+               downlink_fn: Callable = downlink) -> WireOutcome:
+    """Uplink -> Aggregate -> Downlink with byte accounting: the single
+    home of the wire pipeline shared by every engine. Stage functions
+    are injectable (fading channels, async staleness, ... plug in
+    here)."""
+    wire, residual, tier_lo = uplink_fn(comm, delta, residual, theta, mask,
+                                        qkey, axis_name=axis_name)
+    agg_params, mask_eff = aggregate_fn(comm, global_params, wire, mask,
+                                        wkey)
+    bcast, ps_residual = downlink_fn(comm, agg_params, global_params,
+                                     ps_residual,
+                                     jax.random.fold_in(qkey,
+                                                        _DOWNLINK_SALT))
+    rec = comm_budget.round_record(comm, global_params, num_workers, mask,
+                                   mask_eff, tier_lo=tier_lo)
+    return WireOutcome(global_params=bcast, residual=residual,
+                       ps_residual=ps_residual, mask_eff=mask_eff,
+                       record=rec)
+
+
+# ---------------------------------------------------------------------------
+# BestTracking stage (Eqs. 9/10, stacked form used by the mesh engine;
+# the paper engine keeps its WorkerState-shaped pso.update_*_best)
+# ---------------------------------------------------------------------------
+
+def track_local_best(best_params: PyTree, best_loss: Array, params: PyTree,
+                     losses: Array) -> tuple[PyTree, Array]:
+    """Eq. 9 over stacked workers: keep each worker's best-F params."""
+    improved = losses < best_loss
+
+    def leaf(n, o):
+        c = improved.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(c, n, o)
+
+    return (jax.tree.map(leaf, params, best_params),
+            jnp.where(improved, losses, best_loss))
+
+
+def track_global_best(gbest_params: PyTree, gbest_loss: Array,
+                      params: PyTree, loss: Array
+                      ) -> tuple[PyTree, Array]:
+    """Eq. 10: keep the best global model seen so far."""
+    improved = loss < gbest_loss
+    return (jax.tree.map(lambda n, o: jnp.where(improved, n, o), params,
+                         gbest_params),
+            jnp.minimum(loss, gbest_loss))
+
+
+# ---------------------------------------------------------------------------
+# shared LocalUpdate helper
+# ---------------------------------------------------------------------------
+
+def accumulated_grad(grad_fn: Callable, params: PyTree, batch: PyTree,
+                     microbatches: int) -> PyTree:
+    """Gradient of one local batch, optionally accumulated over
+    microbatch chunks (f32 accumulator) to bound activation memory.
+    `grad_fn` is a jax.value_and_grad of the loss."""
+    if microbatches <= 1:
+        _, g = grad_fn(params, batch)
+        return g
+    k = microbatches
+    mbs = jax.tree.map(
+        lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+    def acc(g_sum, mb):
+        _, g = grad_fn(params, mb)
+        return jax.tree.map(
+            lambda s, gg: s + gg.astype(jnp.float32), g_sum, g), None
+
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    g, _ = jax.lax.scan(acc, zeros, mbs)
+    return jax.tree.map(lambda gg, pp: (gg / k).astype(pp.dtype), g, params)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline object
+# ---------------------------------------------------------------------------
+
+class RoundPipeline(NamedTuple):
+    """Static round configuration + the stage functions. Engines build
+    one per (algorithm x comm x fleet) and run their round as
+
+        theta, mask, mean = pipe.select(losses, eta, prev_mean)
+        out = pipe.wire(delta=..., theta=theta, mask=mask, ...)
+        tel = pipe.telemetry(losses=..., ..., outcome=out)
+
+    keeping only their LocalUpdate / BestTracking stages local. Stage
+    fields are swappable for new scenarios (e.g. a fading-channel
+    aggregate_fn) without touching any engine."""
+    algorithm: str
+    comm: CommConfig
+    num_workers: int
+    tau: float = 0.9
+    n_params: int = 0
+    axis_name: Any = None             # mesh spmd vmap axis (None on CPU)
+    score_select_fn: Callable = score_select
+    uplink_fn: Callable = uplink
+    aggregate_fn: Callable = comm_channel.receive
+    downlink_fn: Callable = downlink
+
+    def select(self, losses: Array, eta: Array, prev_theta_mean: Array
+               ) -> tuple[Array, Array, Array]:
+        return self.score_select_fn(self.algorithm, losses, eta, self.tau,
+                                    prev_theta_mean)
+
+    def wire(self, *, delta: PyTree, theta: Array, mask: Array,
+             global_params: PyTree, residual: PyTree, ps_residual: PyTree,
+             qkey: Array, wkey: Array) -> WireOutcome:
+        return wire_round(self.comm, delta=delta, theta=theta, mask=mask,
+                          global_params=global_params, residual=residual,
+                          ps_residual=ps_residual, qkey=qkey, wkey=wkey,
+                          num_workers=self.num_workers,
+                          axis_name=self.axis_name,
+                          uplink_fn=self.uplink_fn,
+                          aggregate_fn=self.aggregate_fn,
+                          downlink_fn=self.downlink_fn)
+
+    def telemetry(self, *, losses: Array, theta: Array, mask: Array,
+                  global_loss: Array, outcome: WireOutcome
+                  ) -> RoundTelemetry:
+        rec = outcome.record
+        return RoundTelemetry(
+            losses=losses, theta=theta, mask=mask, global_loss=global_loss,
+            selected_count=mask.sum(),
+            uploaded_params=selection.uploaded_parameter_count(
+                mask, self.n_params),
+            bytes_up=rec.bytes_up, bytes_down=rec.bytes_down,
+            delivered=rec.delivered,
+            compression_ratio=rec.compression_ratio)
+
+
+def count_params(params: PyTree) -> int:
+    """Total parameter count (static under jit)."""
+    return int(sum(x.size for x in jax.tree.leaves(params)))

@@ -4,23 +4,23 @@ The paper's C edge workers map onto the mesh as data-parallel groups
 (DESIGN.md §3): the swarm state carries a leading *spatial worker* dim W
 sharded over `worker_axes`; each worker's replica is sharded over the
 remaining axes (TP over "model", FSDP over "data" in fsdp mode). One
-jitted `train_step` is one communication round:
-
-    1. every worker takes `local_steps` SGD steps on its micro-batch
-    2. Eq. 8 PSO displacement (inertia + cognitive + social + SGD delta)
-    3. every worker scores F_{i,t} on the shared eval batch (D_g)
-    4. Eq. 5/6 selection against the previous round's mean score
-    5. Eq. 7 through the repro.comm wire: per-worker delta compression
-       (error-feedback residuals ride in the state), channel model
-       (erasure / AWGN / Byzantine), masked delta-mean into the global
-       model -> ONE all-reduce over worker_axes, with bytes-on-the-wire
-       accounting in RoundInfo
-    6. Eq. 9/10 local/global best refresh
+jitted `train_step` is one communication round, built as a thin
+configuration of `core/rounds.py`'s stage pipeline: this module supplies
+only the LocalUpdate stage (local SGD steps + Eq. 8 PSO displacement,
+with `spmd_axis_name` vmap over W); ScoreSelect, the Eq.-7 wire
+(compression, channel, robust aggregation, compressed downlink), and
+byte accounting are the shared stages — the masked delta-mean lowers to
+ONE all-reduce over worker_axes exactly as before.
 
 vmap over the worker dim uses `spmd_axis_name=worker_axes` so internal
 sharding constraints stay consistent with the worker sharding. With
-W == 1 (fsdp mode: the time-multiplexed swarm) the vmap is skipped and
-`temporal_workers` rounds can be scanned by the caller.
+W == 1 (fsdp mode: the time-multiplexed swarm) the local-update vmap is
+skipped and `temporal_workers` rounds can be scanned by the caller.
+
+`fedavg_train_step` is the same pipeline with the all-ones selection
+stage (algorithm="fedavg") and plain-SGD local deltas — the baseline
+rides the identical wire, so robust aggregation and downlink
+compression apply to it too.
 """
 from __future__ import annotations
 
@@ -30,15 +30,18 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm import budget as comm_budget
-from repro.comm import channel as comm_channel
 from repro.comm import compress as comm_compress
+from repro.comm import channel as comm_channel
 from repro.comm.budget import CommConfig
-from repro.core import pso, selection
+from repro.core import pso, rounds
 from repro.core.pso import PsoHyperParams
+from repro.core.rounds import RoundTelemetry
 
 Array = jax.Array
 PyTree = Any
+
+# pre-refactor alias: the mesh path's info is the unified telemetry
+RoundInfo = RoundTelemetry
 
 
 class DistSwarmConfig(NamedTuple):
@@ -51,7 +54,7 @@ class DistSwarmConfig(NamedTuple):
     # grad-accumulation chunks per local step: caps per-device activation
     # memory at batch/microbatches (EXPERIMENTS.md §Perf iteration 2)
     microbatches: int = 1
-    comm: CommConfig = CommConfig()  # uplink compression + channel
+    comm: CommConfig = CommConfig()  # wire: compression/channel/aggregation
 
 
 class DistSwarmState(NamedTuple):
@@ -66,16 +69,8 @@ class DistSwarmState(NamedTuple):
     prev_theta_mean: Array    # () Eq. 6 threshold
     eta: Array                # (W,) non-iid degrees
     round_idx: Array          # ()
-    residual: PyTree          # (W, ...) error-feedback state
-
-
-class RoundInfo(NamedTuple):
-    losses: Array             # (W,) F_{i,t+1} on D_g
-    theta: Array              # (W,)
-    mask: Array               # (W,)
-    global_loss: Array        # ()
-    bytes_up: Array           # () wire bytes transmitted this round
-    delivered: Array          # () uploads surviving the channel
+    residual: PyTree          # (W, ...) uplink error-feedback state
+    ps_residual: PyTree       # PS-side downlink error-feedback state
 
 
 def init_state(global_params: PyTree, cfg: DistSwarmConfig,
@@ -95,8 +90,8 @@ def init_state(global_params: PyTree, cfg: DistSwarmConfig,
         prev_theta_mean=jnp.asarray(jnp.inf, jnp.float32),
         eta=jnp.zeros((W,), jnp.float32) if eta is None else eta,
         round_idx=jnp.zeros((), jnp.int32),
-        residual=stack(jax.tree.map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), global_params)),
+        residual=stack(comm_compress.init_residual(global_params)),
+        ps_residual=rounds.init_ps_residual(global_params),
     )
 
 
@@ -110,6 +105,15 @@ def _spmd_axis_name(cfg: DistSwarmConfig):
     return cfg.worker_axes
 
 
+def _pipeline(cfg: DistSwarmConfig, algorithm: str,
+              params_template: PyTree = None) -> rounds.RoundPipeline:
+    return rounds.RoundPipeline(
+        algorithm=algorithm, comm=cfg.comm, num_workers=cfg.num_spatial,
+        tau=cfg.tau, axis_name=_spmd_axis_name(cfg),
+        n_params=(rounds.count_params(params_template)
+                  if params_template is not None else 0))
+
+
 def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
                      cfg: DistSwarmConfig
                      ) -> Callable[..., tuple[DistSwarmState, RoundInfo]]:
@@ -120,33 +124,13 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
     W = cfg.num_spatial
     grad_fn = jax.value_and_grad(loss_fn)
 
-    def batch_grad(p, batch):
-        """Gradient of the local batch, optionally accumulated over
-        microbatch chunks (f32 accumulator) to bound activation memory."""
-        k = cfg.microbatches
-        if k <= 1:
-            _, g = grad_fn(p, batch)
-            return g
-        mbs = jax.tree.map(
-            lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
-
-        def acc(g_sum, mb):
-            _, g = grad_fn(p, mb)
-            return jax.tree.map(
-                lambda s, gg: s + gg.astype(jnp.float32), g_sum, g), None
-
-        zeros = jax.tree.map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), p)
-        g, _ = jax.lax.scan(acc, zeros, mbs)
-        return jax.tree.map(lambda gg, pp: (gg / k).astype(pp.dtype), g, p)
-
     def local_round(params, velocity, best_params, gbest_params, batch,
                     coeffs=None, lr=None):
-        """One worker: local SGD steps + Eq. 8 PSO displacement."""
+        """LocalUpdate: local SGD steps + Eq. 8 PSO displacement."""
         w0 = params
 
         def sgd(p, _):
-            g = batch_grad(p, batch)
+            g = rounds.accumulated_grad(grad_fn, p, batch, cfg.microbatches)
             return pso.sgd_step(p, g, lr), None
 
         trained, _ = jax.lax.scan(sgd, w0, None, length=cfg.local_steps)
@@ -166,6 +150,7 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
 
     def train_step(state: DistSwarmState, batch: PyTree, eval_batch: PyTree,
                    key: Array) -> tuple[DistSwarmState, RoundInfo]:
+        pipe = _pipeline(cfg, "mdsl", state.global_params)
         # per-worker coefficient draws (see core/mdsl.py)
         ckey, bkey, qkey, wkey = jax.random.split(key, 4)
         coeffs = jax.vmap(pso.sample_coefficients)(jax.random.split(ckey, W))
@@ -198,93 +183,60 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
         else:
             losses = jax.vmap(eval_one)(new_params)
 
-        # --- Eqs. 5-6: scores + adaptive-threshold selection -------------
-        theta = selection.tradeoff_scores(losses, state.eta, cfg.tau)
-        mask = (theta <= state.prev_theta_mean).astype(jnp.float32)
-        best = jax.nn.one_hot(jnp.argmin(theta), W, dtype=jnp.float32)
-        mask = jnp.where(mask.sum() > 0, mask, best)
+        # --- ScoreSelect (Eqs. 5-6) ---------------------------------------
+        theta, mask, theta_mean = pipe.select(losses, state.eta,
+                                              state.prev_theta_mean)
 
-        # --- Eq. 7 through the wire: compress (+ error feedback), push
-        # through the channel, aggregate -> one all-reduce over worker
-        # axes. Default CommConfig reduces to the seed's masked mean. ---
+        # --- Uplink -> Aggregate -> Downlink (Eq. 7 through the wire):
+        # one all-reduce over worker axes; default CommConfig reduces to
+        # the seed's masked mean and a dense broadcast. ---
         delta = jax.tree.map(lambda a, b: a - b, new_params, state.params)
-        if W == 1:
-            w1, r1 = comm_compress.compress_with_ef(
-                cfg.comm, sq(delta), sq(state.residual), qkey)
-            wire, new_res = ex(w1), ex(r1)
-        else:
-            wire, new_res = jax.vmap(
-                functools.partial(comm_compress.compress_with_ef, cfg.comm),
-                spmd_axis_name=_spmd_axis_name(cfg)
-            )(delta, state.residual, jax.random.split(qkey, W))
-        residual = comm_compress.select_residual(mask, new_res,
-                                                 state.residual)
-        global_params, mask_eff = comm_channel.receive(
-            cfg.comm, state.global_params, wire, mask, wkey)
-        rec = comm_budget.round_record(cfg.comm, state.global_params, W,
-                                       mask, mask_eff)
-        global_loss = eval_one(global_params)
+        out = pipe.wire(delta=delta, theta=theta, mask=mask,
+                        global_params=state.global_params,
+                        residual=state.residual,
+                        ps_residual=state.ps_residual,
+                        qkey=qkey, wkey=wkey)
+        global_loss = eval_one(out.global_params)
 
-        # --- Eqs. 9-10: bests ---------------------------------------------
-        improved = losses < state.best_loss
-        sel_tree = lambda c, n, o: jax.tree.map(
-            lambda a, b: jnp.where(
-                c.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), n, o)
-        best_params = sel_tree(improved, new_params, state.best_params)
-        best_loss = jnp.where(improved, losses, state.best_loss)
-        g_improved = global_loss < state.gbest_loss
-        gbest_params = jax.tree.map(
-            lambda n, o: jnp.where(g_improved, n, o), global_params,
-            state.gbest_params)
+        # --- BestTracking (Eqs. 9-10) -------------------------------------
+        best_params, best_loss = rounds.track_local_best(
+            state.best_params, state.best_loss, new_params, losses)
+        gbest_params, gbest_loss = rounds.track_global_best(
+            state.gbest_params, state.gbest_loss, out.global_params,
+            global_loss)
 
         next_state = DistSwarmState(
             params=new_params, velocity=new_vel, best_params=best_params,
-            best_loss=best_loss, global_params=global_params,
-            gbest_params=gbest_params,
-            gbest_loss=jnp.minimum(global_loss, state.gbest_loss),
-            prev_theta_mean=theta.mean(), eta=state.eta,
-            round_idx=state.round_idx + 1, residual=residual)
-        return next_state, RoundInfo(losses=losses, theta=theta, mask=mask,
-                                     global_loss=global_loss,
-                                     bytes_up=rec.bytes_up,
-                                     delivered=rec.delivered)
+            best_loss=best_loss, global_params=out.global_params,
+            gbest_params=gbest_params, gbest_loss=gbest_loss,
+            prev_theta_mean=theta_mean, eta=state.eta,
+            round_idx=state.round_idx + 1, residual=out.residual,
+            ps_residual=out.ps_residual)
+        return next_state, pipe.telemetry(losses=losses, theta=theta,
+                                          mask=mask,
+                                          global_loss=global_loss,
+                                          outcome=out)
 
     return train_step
 
 
 def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
-    """Baseline: plain data-parallel FedAvg round (all workers, SGD only).
-    Used for paper-faithful comparisons at mesh scale and as the roofline
+    """Baseline: plain data-parallel FedAvg round (all workers, SGD only)
+    — the same pipeline with the all-ones selection stage. Used for
+    paper-faithful comparisons at mesh scale and as the roofline
     reference for the selection overhead."""
     grad_fn = jax.value_and_grad(loss_fn)
     W = cfg.num_spatial
 
     def local(params, batch, lr):
         def sgd(p, _):
-            if cfg.microbatches > 1:
-                k = cfg.microbatches
-                mbs = jax.tree.map(
-                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
-                    batch)
-
-                def acc(g_sum, mb):
-                    _, g = grad_fn(p, mb)
-                    return jax.tree.map(
-                        lambda s, gg: s + gg.astype(jnp.float32),
-                        g_sum, g), None
-
-                zeros = jax.tree.map(
-                    lambda x: jnp.zeros(x.shape, jnp.float32), p)
-                g, _ = jax.lax.scan(acc, zeros, mbs)
-                g = jax.tree.map(lambda gg, pp: (gg / k).astype(pp.dtype),
-                                 g, p)
-            else:
-                _, g = grad_fn(p, batch)
+            g = rounds.accumulated_grad(grad_fn, p, batch, cfg.microbatches)
             return pso.sgd_step(p, g, lr), None
         trained, _ = jax.lax.scan(sgd, params, None, length=cfg.local_steps)
         return jax.tree.map(lambda a, b: a - b, trained, params)
 
     def train_step(state: DistSwarmState, batch, eval_batch, key):
+        pipe = _pipeline(cfg, "fedavg", state.global_params)
         bkey, qkey, wkey = jax.random.split(key, 3)
         lr = pso.decayed_lr(cfg.hp, state.round_idx)
         if W == 1:
@@ -300,29 +252,31 @@ def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
         zeros = jax.tree.map(jnp.zeros_like, deltas)
         deltas = comm_channel.corrupt_local_updates(cfg.comm, zeros,
                                                     deltas, bkey)
-        mask = jnp.ones((W,), jnp.float32)
+        # real per-worker scores: F_i at w_t + delta_i on the eval batch
+        worker_params = jax.tree.map(lambda g, d: g[None] + d,
+                                     state.global_params, deltas)
+        eval_one = lambda p: loss_fn(p, eval_batch)
         if W == 1:
-            sq = lambda t: jax.tree.map(lambda x: x[0], t)
-            w1, r1 = comm_compress.compress_with_ef(
-                cfg.comm, sq(deltas), sq(state.residual), qkey)
-            wire = jax.tree.map(lambda x: x[None], w1)
-            new_res = jax.tree.map(lambda x: x[None], r1)
+            losses = eval_one(jax.tree.map(lambda x: x[0],
+                                           worker_params))[None]
         else:
-            wire, new_res = jax.vmap(
-                functools.partial(comm_compress.compress_with_ef, cfg.comm),
-                spmd_axis_name=_spmd_axis_name(cfg)
-            )(deltas, state.residual, jax.random.split(qkey, W))
-        global_params, mask_eff = comm_channel.receive(
-            cfg.comm, state.global_params, wire, mask, wkey)
-        rec = comm_budget.round_record(cfg.comm, state.global_params, W,
-                                       mask, mask_eff)
-        global_loss = loss_fn(global_params, eval_batch)
-        next_state = state._replace(global_params=global_params,
+            losses = jax.vmap(eval_one)(worker_params)
+        theta, mask, _ = pipe.select(losses, state.eta,
+                                     state.prev_theta_mean)
+
+        out = pipe.wire(delta=deltas, theta=theta, mask=mask,
+                        global_params=state.global_params,
+                        residual=state.residual,
+                        ps_residual=state.ps_residual,
+                        qkey=qkey, wkey=wkey)
+        global_loss = loss_fn(out.global_params, eval_batch)
+        next_state = state._replace(global_params=out.global_params,
                                     round_idx=state.round_idx + 1,
-                                    residual=new_res)
-        info = RoundInfo(losses=jnp.zeros((W,)), theta=jnp.zeros((W,)),
-                         mask=mask, global_loss=global_loss,
-                         bytes_up=rec.bytes_up, delivered=rec.delivered)
-        return next_state, info
+                                    residual=out.residual,
+                                    ps_residual=out.ps_residual)
+        return next_state, pipe.telemetry(losses=losses, theta=theta,
+                                          mask=mask,
+                                          global_loss=global_loss,
+                                          outcome=out)
 
     return train_step

@@ -16,7 +16,6 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh both] [--skip-done]
 """
 import argparse
-import dataclasses
 import gzip
 import json
 import time

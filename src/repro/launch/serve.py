@@ -16,7 +16,6 @@ import argparse
 import json
 import time
 from pathlib import Path
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm.budget import CommConfig
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import swarm_dist
 from repro.core.swarm_dist import DistSwarmConfig, DistSwarmState
@@ -180,8 +181,12 @@ def _shard_batch_specs(batch: dict, rules: ShardingRules, mesh: Mesh,
 
 
 def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
-                     algorithm: str = "mdsl") -> BuiltStep:
-    """The M-DSL communication round as one jitted SPMD program."""
+                     algorithm: str = "mdsl",
+                     comm: Optional[CommConfig] = None) -> BuiltStep:
+    """The M-DSL communication round as one jitted SPMD program. `comm`
+    threads the wire config (compression / channel / aggregator /
+    downlink) into the mesh round, so comm scenarios lower and cost out
+    at 512-device scale exactly like the defaults."""
     cfg = _prep_cfg(cfg)
     rules = train_rules(cfg, mesh)
     worker_axes, W = swarm_layout(cfg, mesh)
@@ -191,7 +196,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     per_worker = shape.global_batch // max(W, 1)
     micro = cfg.train_microbatches or min(8, max(1, per_worker // 8))
     dcfg = DistSwarmConfig(worker_axes=worker_axes, num_spatial=W,
-                           local_steps=1, tau=0.9, microbatches=micro)
+                           local_steps=1, tau=0.9, microbatches=micro,
+                           comm=(comm or CommConfig()).validate())
 
     loss_fn = model.loss
     step = (swarm_dist.build_train_step(loss_fn, dcfg) if algorithm == "mdsl"
@@ -219,7 +225,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         gbest_params=pshard(state_shapes.gbest_params, False),
         gbest_loss=scalar, prev_theta_mean=scalar, eta=wvec,
         round_idx=scalar,
-        residual=pshard(state_shapes.residual, True))
+        residual=pshard(state_shapes.residual, True),
+        ps_residual=pshard(state_shapes.ps_residual, False))
 
     batch_sh = _shard_batch_specs(specs["batch"], rules, mesh,
                                   worker_axes=worker_axes)
@@ -227,8 +234,10 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                  ShardingRules(rules, batch=None), mesh)
     in_sh = (state_shardings, batch_sh, eval_sh, scalar)
     info_sh = swarm_dist.RoundInfo(losses=wvec, theta=wvec, mask=wvec,
-                                   global_loss=scalar, bytes_up=scalar,
-                                   delivered=scalar)
+                                   global_loss=scalar, selected_count=scalar,
+                                   uploaded_params=scalar, bytes_up=scalar,
+                                   bytes_down=scalar, delivered=scalar,
+                                   compression_ratio=scalar)
 
     def wrapped(state, batch, eval_batch, key):
         with use_rules(rules, mesh):
@@ -316,7 +325,8 @@ def build_serve_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh
 
 
 def build_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
-               algorithm: str = "mdsl") -> BuiltStep:
+               algorithm: str = "mdsl",
+               comm: Optional[CommConfig] = None) -> BuiltStep:
     if shape.kind == "train":
-        return build_train_step(cfg, shape, mesh, algorithm)
+        return build_train_step(cfg, shape, mesh, algorithm, comm=comm)
     return build_serve_step(cfg, shape, mesh)

@@ -16,20 +16,25 @@ Two modes:
 
 Both modes thread a repro.comm CommConfig through the engine:
 --compressor/--topk-ratio/--no-error-feedback, --channel/--drop-prob/
---snr-db, --byzantine/--byzantine-mode. The metrics JSON then carries
-per-round bytes_up/bytes_down/delivered next to the accuracy curve.
+--snr-db, --byzantine/--byzantine-mode, --aggregator/--trim-ratio
+(robust Eq. 7), --downlink-compressor (quantized broadcast with PS-side
+error feedback), --adaptive-bits (per-worker wire tier from the Eq.-5
+rank). The config is validated at arg-parse time so bad flags fail
+fast, and the metrics JSON carries per-round bytes_up/bytes_down/
+delivered next to the accuracy curve.
 
 Usage:
   python -m repro.launch.train --mode paper --algorithm mdsl --case noniid2 \\
       --dataset cifar_like --rounds 40
   python -m repro.launch.train --mode paper --algorithm mdsl --rounds 5 \\
       --compressor topk --channel erasure
+  python -m repro.launch.train --mode paper --byzantine 3 \\
+      --aggregator median --downlink-compressor int8
   python -m repro.launch.train --mode mesh --arch smollm-360m --steps 5
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from pathlib import Path
@@ -40,8 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.comm import (BYZANTINE_MODES, CHANNELS, COMPRESSORS, CommConfig,
-                        dense_bytes, payload_bytes)
+from repro.comm import (AGGREGATORS, BYZANTINE_MODES, CHANNELS, COMPRESSORS,
+                        CommConfig, dense_bytes, downlink_config,
+                        payload_bytes)
 from repro.configs.base import get_arch
 from repro.configs.paper_cnn import paper_cnn, paper_resnet
 from repro.core import losses as losses_mod
@@ -129,6 +135,8 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
               "payload_bytes_per_worker": payload_bytes(
                   comm, state.global_params),
               "dense_bytes_per_worker": dense_bytes(state.global_params),
+              "downlink_bytes_per_worker": payload_bytes(
+                  downlink_config(comm), state.global_params),
               "acc": [], "global_loss": [], "selected": [], "delivered": [],
               "uploaded_params": [], "bytes_up": [], "bytes_down": [],
               "round_time_s": []}
@@ -146,11 +154,14 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
         record["delivered"].append(int(metrics.delivered_count))
         record["uploaded_params"].append(float(metrics.uploaded_params))
         # exact ints host-side: the in-jit f32 CommRecord drifts > 16 MiB
+        # (adaptive tiers mix payloads per worker, so trust the in-jit
+        # accounting there)
         record["bytes_up"].append(
-            int(metrics.selected_count)
+            float(metrics.bytes_up) if comm.adaptive_bits
+            else int(metrics.selected_count)
             * record["payload_bytes_per_worker"])
         record["bytes_down"].append(
-            num_workers * record["dense_bytes_per_worker"])
+            num_workers * record["downlink_bytes_per_worker"])
         record["round_time_s"].append(round(time.time() - t0, 2))
         if verbose and (t % log_every == 0 or t == rounds - 1):
             print(f"[{algorithm}/{case}/{dataset}] round {t + 1}/{rounds} "
@@ -163,8 +174,12 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
     record["total_uploaded_params"] = float(sum(record["uploaded_params"]))
     record["total_bytes_up"] = float(sum(record["bytes_up"]))
     record["total_bytes_down"] = float(sum(record["bytes_down"]))
-    record["compression_ratio"] = (record["dense_bytes_per_worker"]
-                                   / record["payload_bytes_per_worker"])
+    # adaptive tiers mix payloads per worker: the fleet-mean ratio comes
+    # from the in-jit accounting, matching the bytes_up column
+    record["compression_ratio"] = (
+        float(metrics.compression_ratio) if comm.adaptive_bits
+        else record["dense_bytes_per_worker"]
+        / record["payload_bytes_per_worker"])
     return record
 
 
@@ -211,10 +226,13 @@ def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
         return out
 
     payload = payload_bytes(dcfg.comm, params)
+    down_payload = payload_bytes(downlink_config(dcfg.comm), params)
     record = {"arch": arch, "reduced": reduced, "steps": steps,
               "comm": dcfg.comm._asdict(),
-              "payload_bytes_per_worker": payload, "global_loss": [],
-              "selected": [], "bytes_up": [], "step_time_s": []}
+              "payload_bytes_per_worker": payload,
+              "downlink_bytes_per_worker": down_payload, "global_loss": [],
+              "worker_losses": [], "selected": [], "delivered": [],
+              "bytes_up": [], "bytes_down": [], "step_time_s": []}
     for i in range(steps):
         key, k1, k2, k3 = jax.random.split(key, 4)
         t0 = time.time()
@@ -222,9 +240,14 @@ def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
                               k3)
         gl = float(info.global_loss)
         record["global_loss"].append(gl)
+        record["worker_losses"].append(np.asarray(info.losses).tolist())
         record["selected"].append(float(info.mask.sum()))
+        record["delivered"].append(float(info.delivered))
         # exact ints host-side (the in-jit f32 drifts above 16 MiB)
-        record["bytes_up"].append(int(info.mask.sum()) * payload)
+        record["bytes_up"].append(
+            float(info.bytes_up) if dcfg.comm.adaptive_bits
+            else int(info.mask.sum()) * payload)
+        record["bytes_down"].append(W * down_payload)
         record["step_time_s"].append(round(time.time() - t0, 2))
         if verbose:
             print(f"[mesh/{arch}] step {i + 1}/{steps} global_loss={gl:.4f} "
@@ -262,6 +285,13 @@ def main() -> None:
     ap.add_argument("--byzantine", type=int, default=0)
     ap.add_argument("--byzantine-mode", default="sign_flip",
                     choices=list(BYZANTINE_MODES))
+    ap.add_argument("--byzantine-scale", type=float, default=1.0)
+    ap.add_argument("--aggregator", default="mean",
+                    choices=list(AGGREGATORS))
+    ap.add_argument("--trim-ratio", type=float, default=0.1)
+    ap.add_argument("--downlink-compressor", default="identity",
+                    choices=list(COMPRESSORS))
+    ap.add_argument("--adaptive-bits", action="store_true")
     # mesh mode
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--steps", type=int, default=5)
@@ -272,7 +302,16 @@ def main() -> None:
         compressor=args.compressor, topk_ratio=args.topk_ratio,
         error_feedback=not args.no_error_feedback, channel=args.channel,
         drop_prob=args.drop_prob, snr_db=args.snr_db,
-        byzantine=args.byzantine, byzantine_mode=args.byzantine_mode)
+        byzantine=args.byzantine, byzantine_mode=args.byzantine_mode,
+        byzantine_scale=args.byzantine_scale, aggregator=args.aggregator,
+        trim_ratio=args.trim_ratio,
+        downlink_compressor=args.downlink_compressor,
+        adaptive_bits=args.adaptive_bits)
+    try:
+        # fail fast at the CLI, not deep inside the first jitted round
+        comm.validate()
+    except ValueError as e:
+        ap.error(str(e))
 
     if args.mode == "paper":
         rec = run_paper_experiment(

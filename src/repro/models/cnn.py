@@ -8,7 +8,6 @@ shape of the paper's models.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -17,7 +17,7 @@ output so the trainer can add it to the task loss.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers
 from repro.models.layers import cdtype, dense_init, rmsnorm, rmsnorm_init
 from repro.sharding import shard
 

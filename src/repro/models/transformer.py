@@ -24,7 +24,6 @@ Public API (used by launch/, tests, benchmarks):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

@@ -12,7 +12,7 @@ shard identically (the mesh trainer reuses the param shardings).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp

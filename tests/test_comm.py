@@ -1,8 +1,6 @@
 """repro.comm — compressor invariants, error-feedback telescoping,
 channel semantics through Eq. 7, Byzantine robustness of selection, and
 quant-pack kernel/oracle equivalence."""
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

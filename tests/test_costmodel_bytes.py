@@ -35,7 +35,6 @@ class TestDusBytes:
 
 class TestCollectivePayload:
     def test_psum_bytes(self):
-        import os
         # single-device: GSPMD emits no collective; exercise the parser
         # on a synthetic HLO instead
         hlo = """

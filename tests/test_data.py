@@ -3,7 +3,6 @@ determinism."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import noniid
 from repro.data import partition, synthetic

@@ -2,7 +2,6 @@
 XLA's own cost_analysis on controlled programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_costmodel

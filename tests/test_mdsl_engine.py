@@ -1,8 +1,6 @@
 """End-to-end behaviour of the M-DSL round engine (Algorithm 1) and the
 distributed swarm step: training improves, selection stays within bounds,
 comm accounting matches the mask, all four algorithms run."""
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

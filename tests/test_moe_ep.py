@@ -10,7 +10,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

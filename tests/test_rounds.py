@@ -1,0 +1,392 @@
+"""core/rounds stage engine: refactor equivalence contract (golden
+values captured from the pre-refactor implementations), robust-
+aggregation properties under Byzantine workers, compressed downlink
+with PS-side error feedback, adaptive per-worker wire tiers, unified
+telemetry on every path, and dtype-aware byte accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import budget, channel
+from repro.comm.budget import CommConfig
+from repro.core import mdsl, rounds, swarm_dist
+from repro.core.mdsl import MdslConfig
+from repro.core.pso import PsoHyperParams
+from repro.core.swarm_dist import DistSwarmConfig
+
+KEY = jax.random.PRNGKey(0)
+
+# ---------------------------------------------------------------------------
+# golden values: outputs of the PRE-refactor `mdsl_round` /
+# `build_train_step` / `fedavg_train_step` on the scenarios below
+# (default CommConfig, identical keys), captured at commit a80fffe.
+# The pipeline rewrite must reproduce them.
+# ---------------------------------------------------------------------------
+
+GOLDEN_A_GLOBAL_W = [1.80128232e-01, 2.31610879e-01, -2.86240667e-01,
+                     2.56585568e-01, -3.08933437e-01, 2.93604940e-01,
+                     -2.87833601e-01, 1.86282575e-01, 1.72904655e-01,
+                     -2.41597712e-01, -2.41481274e-01, 3.03303987e-01,
+                     1.22825637e-01, 2.72431582e-01, -2.92581409e-01]
+GOLDEN_A_GLOBAL_B = [-2.67224669e-01, 7.83292204e-02, 2.51419336e-01]
+GOLDEN_A_LOSSES = [7.22671449e-01, 7.31087863e-01, 7.29802847e-01,
+                   7.94080496e-01]
+GOLDEN_A_THETA = [6.50404274e-01, 6.82979047e-01, 7.06822574e-01,
+                  7.89672434e-01]
+GOLDEN_A_MASK = [1.0, 1.0, 1.0, 0.0]
+GOLDEN_A_GLOBAL_LOSS = 7.27651119e-01
+GOLDEN_A_BYTES_UP = 216.0
+GOLDEN_A_BYTES_DOWN = 288.0
+
+GOLDEN_B_GLOBAL_W = [-2.84974761e-02, 3.83706987e-01, -2.87333608e-01,
+                     -2.04035312e-01, -1.62206486e-01, 4.89676893e-01,
+                     -5.31331562e-02, -7.95307755e-02, 1.17682204e-01,
+                     -2.71218508e-01, 3.40326071e-01, -4.78067808e-02,
+                     -9.34248269e-02, -2.00849637e-01, 1.59204692e-01,
+                     -2.55024940e-01, 1.22836195e-02, 9.44640934e-02]
+GOLDEN_B_GLOBAL_B = [-2.19994038e-01, 9.50741814e-04, 2.19043285e-01]
+GOLDEN_B_LOSSES = [6.29979491e-01, 8.05368781e-01, 7.59640336e-01]
+GOLDEN_B_THETA = [5.66981554e-01, 7.24831879e-01, 6.83676302e-01]
+GOLDEN_B_GLOBAL_LOSS = 7.11177707e-01
+GOLDEN_B_BYTES_UP = 252.0
+
+GOLDEN_F_GLOBAL_W = [-1.40705062e-02, 2.38054156e-01, -1.56107754e-01,
+                     -1.07632339e-01, -4.92234156e-02, 2.80290931e-01,
+                     -4.26485874e-02, -4.44932096e-02, 7.21600577e-02,
+                     -1.83111951e-01, 2.49882087e-01, -4.54693474e-02,
+                     -4.35862467e-02, -1.58165574e-01, 6.66820556e-02,
+                     -1.74432680e-01, -9.04508308e-03, 3.52005400e-02]
+GOLDEN_F_GLOBAL_B = [-1.44934461e-01, -4.75801248e-03, 1.49692491e-01]
+GOLDEN_F_GLOBAL_LOSS = 8.34809184e-01
+
+
+def _paper_scenario(algorithm="mdsl", comm=CommConfig(), rounds_n=3):
+    C, din, L = 4, 5, 3
+    key = jax.random.PRNGKey(42)
+    w_true = jax.random.normal(key, (din, L))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (C, 32, din))
+    ys = jnp.argmax(jnp.einsum("cnd,dl->cnl", xs, w_true), axis=-1)
+    gx = jax.random.normal(jax.random.fold_in(key, 2), (48, din))
+    gy = jnp.argmax(gx @ w_true, axis=-1)
+
+    def init(k):
+        return {"w": 0.01 * jax.random.normal(k, (din, L)),
+                "b": jnp.zeros((L,))}
+
+    def loss_fn(p, x, y):
+        logits = x @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[..., None], -1).mean()
+
+    cfg = MdslConfig(algorithm=algorithm, local_epochs=2, batch_size=16,
+                     hp=PsoHyperParams(learning_rate=0.2,
+                                       velocity_clip=0.1), comm=comm)
+    state = mdsl.init_state(jax.random.fold_in(key, 3), init, C,
+                            eta=jnp.arange(C, dtype=jnp.float32) / C)
+    n_params = mdsl.count_params(state.global_params)
+    for r in range(rounds_n):
+        state, m = mdsl.mdsl_round(
+            state, xs, ys, gx, gy, jax.random.fold_in(key, 100 + r),
+            loss_fn=loss_fn, eval_fn=loss_fn, cfg=cfg, n_params=n_params)
+    return state, m
+
+
+def _mesh_scenario(fedavg=False, comm=CommConfig(), steps=3):
+    W, din, dout = 3, 6, 3
+    key = jax.random.PRNGKey(7)
+    w_true = jax.random.normal(key, (din, dout))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (W, 16, din))
+    ys = jnp.argmax(xs @ w_true, axis=-1)
+    batch = {"x": xs, "y": ys}
+    eval_batch = {"x": xs[0], "y": ys[0]}
+
+    def loss_fn(p, b):
+        logits = b["x"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, b["y"][..., None], -1).mean()
+
+    params = {"w": 0.05 * jax.random.normal(jax.random.fold_in(key, 2),
+                                            (din, dout)),
+              "b": jnp.zeros((dout,))}
+    cfg = DistSwarmConfig(worker_axes=(), num_spatial=W, local_steps=2,
+                          hp=PsoHyperParams(learning_rate=0.2,
+                                            velocity_clip=0.5), comm=comm)
+    build = (swarm_dist.fedavg_train_step if fedavg
+             else swarm_dist.build_train_step)
+    step = jax.jit(build(loss_fn, cfg))
+    state = swarm_dist.init_state(params, cfg)
+    for r in range(steps):
+        state, info = step(state, batch, eval_batch,
+                           jax.random.PRNGKey(60 + r))
+    return state, info
+
+
+class TestRefactorEquivalence:
+    """With default CommConfig and identical keys, the pipeline must
+    reproduce the pre-refactor implementations to float tolerance."""
+
+    def test_paper_round_matches_golden(self):
+        state, m = _paper_scenario()
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(GOLDEN_A_GLOBAL_W,
+                                              np.float32).reshape(5, 3),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(state.global_params["b"]),
+                                   GOLDEN_A_GLOBAL_B, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(m.losses), GOLDEN_A_LOSSES,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(m.theta), GOLDEN_A_THETA,
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(m.mask), GOLDEN_A_MASK)
+        assert float(m.global_loss) == pytest.approx(GOLDEN_A_GLOBAL_LOSS,
+                                                     rel=1e-5)
+        assert float(m.bytes_up) == GOLDEN_A_BYTES_UP
+        assert float(m.bytes_down) == GOLDEN_A_BYTES_DOWN
+
+    def test_mesh_step_matches_golden(self):
+        state, info = _mesh_scenario()
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(GOLDEN_B_GLOBAL_W,
+                                              np.float32).reshape(6, 3),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(state.global_params["b"]),
+                                   GOLDEN_B_GLOBAL_B, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(info.losses), GOLDEN_B_LOSSES,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(info.theta), GOLDEN_B_THETA,
+                                   rtol=1e-5)
+        assert float(info.global_loss) == pytest.approx(
+            GOLDEN_B_GLOBAL_LOSS, rel=1e-5)
+        assert float(info.bytes_up) == GOLDEN_B_BYTES_UP
+
+    def test_fedavg_mesh_step_matches_golden(self):
+        state, info = _mesh_scenario(fedavg=True)
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(GOLDEN_F_GLOBAL_W,
+                                              np.float32).reshape(6, 3),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(state.global_params["b"]),
+                                   GOLDEN_F_GLOBAL_B, rtol=1e-5, atol=1e-6)
+        assert float(info.global_loss) == pytest.approx(
+            GOLDEN_F_GLOBAL_LOSS, rel=1e-5)
+
+
+class TestUnifiedTelemetry:
+    """Satellite: the mesh path must no longer drop bytes_down /
+    compression_ratio, and fedavg must report real per-worker losses."""
+
+    def test_mesh_info_carries_wire_accounting(self):
+        _, info = _mesh_scenario(comm=CommConfig(compressor="topk",
+                                                 topk_ratio=0.25))
+        n = 6 * 3 + 3
+        assert float(info.bytes_down) == pytest.approx(3 * n * 4)
+        assert float(info.compression_ratio) > 1.0
+        assert float(info.bytes_up) < float(info.mask.sum()) * n * 4
+        # pre-refactor aliases resolve to the unified fields
+        assert info.delivered_count is info.delivered
+        assert info.eval_losses is info.losses
+
+    def test_fedavg_reports_real_losses_and_theta(self):
+        _, info = _mesh_scenario(fedavg=True)
+        assert np.all(np.asarray(info.losses) > 0.0)
+        np.testing.assert_array_equal(np.asarray(info.theta),
+                                      np.asarray(info.losses))
+        np.testing.assert_array_equal(np.asarray(info.mask), 1.0)
+
+    def test_paper_and_mesh_schemas_are_identical(self):
+        assert mdsl.RoundMetrics is swarm_dist.RoundInfo
+        assert swarm_dist.RoundInfo is rounds.RoundTelemetry
+
+
+class TestRobustAggregation:
+    """Property: under byzantine=k amplified sign-flip deltas with an
+    all-ones mask (the FedAvg exposure), masked-mean diverges with the
+    attack magnitude while median / trimmed mean stay bounded by the
+    honest deltas."""
+
+    def _aggregate(self, aggregator, d, trim_ratio=0.3):
+        cfg = CommConfig(aggregator=aggregator, trim_ratio=trim_ratio)
+        g = {"x": jnp.zeros(d.shape[1:])}
+        out, _ = channel.receive(cfg, g, {"x": d}, jnp.ones(d.shape[0]),
+                                 KEY)
+        return np.asarray(out["x"])
+
+    @pytest.mark.parametrize("scale", [10.0, 1e3, 1e6])
+    @pytest.mark.parametrize("k", [1, 3])
+    def test_median_and_trimmed_bounded_where_mean_diverges(self, scale, k):
+        C, n = 10, 32
+        honest = 0.1 * jax.random.normal(KEY, (C, n))
+        attacked = honest.at[-k:].set(-scale)
+        honest_bound = float(jnp.abs(honest[:-k]).max())
+        mean = self._aggregate("mean", attacked)
+        med = self._aggregate("median", attacked)
+        trim = self._aggregate("trimmed_mean", attacked)
+        # the mean is dragged proportionally to the attack amplitude
+        assert np.abs(mean).max() > scale * k / C * 0.9
+        # robust aggregates never leave the honest range
+        assert np.abs(med).max() <= honest_bound + 1e-6
+        assert np.abs(trim).max() <= honest_bound + 1e-6
+
+    def test_median_matches_numpy_on_delivered_subset(self):
+        C, n = 7, 16
+        d = jax.random.normal(KEY, (C, n))
+        mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0])
+        cfg = CommConfig(aggregator="median")
+        g = {"x": jnp.zeros(n)}
+        out, _ = channel.receive(cfg, g, {"x": d}, mask, KEY)
+        want = np.median(np.asarray(d)[np.asarray(mask) > 0], axis=0)
+        np.testing.assert_allclose(np.asarray(out["x"]), want, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_trimmed_mean_matches_scipy_style_reference(self):
+        C, n = 9, 8
+        d = jax.random.normal(KEY, (C, n))
+        cfg = CommConfig(aggregator="trimmed_mean", trim_ratio=0.25)
+        g = {"x": jnp.zeros(n)}
+        out, _ = channel.receive(cfg, g, {"x": d}, jnp.ones(C), KEY)
+        s = np.sort(np.asarray(d), axis=0)
+        t = int(0.25 * C)
+        want = s[t:C - t].mean(axis=0)
+        np.testing.assert_allclose(np.asarray(out["x"]), want, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_all_lost_round_leaves_global_unchanged(self):
+        cfg = CommConfig(aggregator="median")
+        g = {"x": jnp.full(5, 3.0)}
+        out, _ = channel.receive(cfg, g, {"x": jnp.ones((4, 5))},
+                                 jnp.zeros(4), KEY)
+        np.testing.assert_array_equal(np.asarray(out["x"]), 3.0)
+
+    def test_engine_median_survives_byzantine_fedavg(self):
+        """End-to-end: fedavg (all workers aggregated) with gaussian
+        byzantine noise learns under median, degrades under mean."""
+        def run(aggregator):
+            comm = CommConfig(byzantine=1, byzantine_mode="gaussian",
+                              byzantine_scale=25.0, aggregator=aggregator)
+            state, _ = _paper_scenario(algorithm="fedavg", comm=comm,
+                                       rounds_n=4)
+            C, din, L = 4, 5, 3
+            key = jax.random.PRNGKey(42)
+            w_true = jax.random.normal(key, (din, L))
+            gx = jax.random.normal(jax.random.fold_in(key, 2), (48, din))
+            gy = jnp.argmax(gx @ w_true, axis=-1)
+            pred = jnp.argmax(gx @ state.global_params["w"]
+                              + state.global_params["b"], axis=-1)
+            return float((pred == gy).mean())
+
+        assert run("median") > run("mean") + 0.1
+
+
+class TestDownlinkCompression:
+    def test_ps_error_feedback_telescopes(self):
+        """The compressed broadcast trajectory tracks the exact
+        aggregate to within one residual (Seide-style telescoping at
+        the PS)."""
+        cfg = CommConfig(downlink_compressor="int4")
+        g = {"x": jnp.zeros(64)}
+        exact = {"x": jnp.zeros(64)}
+        res = rounds.init_ps_residual(g)
+        key = KEY
+        for s in range(40):
+            key, k1, k2 = jax.random.split(key, 3)
+            step = 0.1 * jax.random.normal(k1, (64,))
+            exact = {"x": exact["x"] + step}
+            g, res = rounds.downlink(cfg, {"x": g["x"] + step}, g, res, k2)
+        np.testing.assert_allclose(np.asarray(g["x"] + res["x"]),
+                                   np.asarray(exact["x"]), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_identity_downlink_is_noop(self):
+        cfg = CommConfig()
+        g = {"x": jnp.ones(8)}
+        agg = {"x": jnp.full(8, 2.0)}
+        res = rounds.init_ps_residual(g)
+        out, new_res = rounds.downlink(cfg, agg, g, res, KEY)
+        assert out is agg and new_res is res
+
+    def test_bytes_down_reflects_downlink_compressor(self):
+        tree = {"x": jnp.zeros(1000)}
+        mask = jnp.ones(4)
+        dense = budget.round_record(CommConfig(), tree, 4, mask, mask)
+        comp = budget.round_record(CommConfig(downlink_compressor="int8"),
+                                   tree, 4, mask, mask)
+        assert float(dense.bytes_down) == 4 * 4000
+        assert float(comp.bytes_down) == 4 * (1000 + 4)
+
+    def test_engine_compressed_downlink_still_learns(self):
+        comm = CommConfig(downlink_compressor="int8")
+        state, m = _paper_scenario(comm=comm)
+        base, m0 = _paper_scenario()
+        assert float(m.bytes_down) < float(m0.bytes_down)
+        # compressed broadcast stays in the same league
+        assert float(m.global_loss) < float(m0.global_loss) + 0.2
+
+
+class TestAdaptiveBits:
+    def test_tiers_assigned_by_score_rank(self):
+        cfg = CommConfig(compressor="int8", adaptive_bits=True)
+        theta = jnp.asarray([3.0, 0.5, 2.0, 1.0])  # best: 1, 3, 2, 0
+        tiers, lo = rounds.tier_masks(cfg, theta)
+        assert [t.compressor for t in tiers] == ["int8", "int4"]
+        np.testing.assert_array_equal(np.asarray(lo), [1.0, 0.0, 1.0, 0.0])
+
+    def test_int4_has_no_lower_tier(self):
+        cfg = CommConfig(compressor="int4", adaptive_bits=True)
+        tiers, lo = rounds.tier_masks(cfg, jnp.zeros(4))
+        assert len(tiers) == 1 and lo is None
+
+    def test_adaptive_bytes_below_uniform(self):
+        tree = {"x": jnp.zeros(1000)}
+        mask = jnp.ones(8)
+        lo = jnp.asarray([0.0] * 4 + [1.0] * 4)
+        uni = budget.round_record(CommConfig(compressor="int8"), tree, 8,
+                                  mask, mask)
+        ada = budget.round_record(
+            CommConfig(compressor="int8", adaptive_bits=True), tree, 8,
+            mask, mask, tier_lo=lo)
+        assert float(ada.bytes_up) < float(uni.bytes_up)
+        assert float(ada.compression_ratio) > float(uni.compression_ratio)
+
+    def test_engine_adaptive_run_learns_and_charges_less(self):
+        comm = CommConfig(compressor="int8", adaptive_bits=True)
+        state, m = _paper_scenario(comm=comm)
+        _, m_uni = _paper_scenario(comm=CommConfig(compressor="int8"))
+        assert float(m.bytes_up) <= float(m_uni.bytes_up)
+        for leaf in jax.tree.leaves(state.global_params):
+            assert bool(jnp.isfinite(leaf).all())
+
+
+class TestByteAccounting:
+    def test_dense_bytes_uses_dtype_itemsize(self):
+        tree = {"w": jnp.zeros((10, 4), jnp.bfloat16),
+                "b": jnp.zeros((4,), jnp.float32)}
+        assert budget.dense_bytes(tree) == 10 * 4 * 2 + 4 * 4
+        # identity payload matches the dtype-aware dense charge
+        assert budget.payload_bytes(CommConfig(), tree) == \
+            budget.dense_bytes(tree)
+
+    def test_topk_payload_ships_native_dtype_values(self):
+        tree = {"w": jnp.zeros((100,), jnp.bfloat16)}
+        cfg = CommConfig(compressor="topk", topk_ratio=0.1)
+        assert budget.payload_bytes(cfg, tree) == 10 * (2 + 4)
+
+    def test_validate_rejects_new_bad_fields(self):
+        with pytest.raises(ValueError):
+            CommConfig(aggregator="mode").validate()
+        with pytest.raises(ValueError):
+            CommConfig(downlink_compressor="zip").validate()
+        with pytest.raises(ValueError):
+            CommConfig(trim_ratio=0.5).validate()
+
+    def test_cli_validates_at_parse_time(self, capsys):
+        import sys
+        from unittest import mock
+
+        from repro.launch import train
+        argv = ["train", "--mode", "paper", "--topk-ratio", "7.0",
+                "--compressor", "topk"]
+        with mock.patch.object(sys, "argv", argv):
+            with pytest.raises(SystemExit):
+                train.main()
+        assert "topk_ratio" in capsys.readouterr().err
