@@ -1,0 +1,133 @@
+"""Dry-run comm sweep: the scenario registry's wire configs through the
+512-device cost model (ROADMAP open item).
+
+For each comm-flavored scenario, lower + compile the mesh train step on
+the 512-placeholder-device multi-pod mesh (launch/dryrun.py) with that
+scenario's CommConfig threaded through `build_step`, and report the
+per-scenario collective-bytes delta against the ideal dense wire. This
+prices a comm regime *before* burning real pod time: a compressor that
+saves uplink in the fleet simulation but inflates on-mesh collectives
+shows up here first.
+
+One table, saved to artifacts/dryrun/comm_scenarios[_reduced].json.
+
+  PYTHONPATH=src python -m benchmarks.comm_dryrun_sweep \\
+      [--arch smollm-360m] [--shape train_4k] [--scenarios a,b,...]
+      [--reduced]
+
+Full-size archs need a large-memory host (the 512-way SPMD compile of
+the full smollm-360m train step exceeds a 128 GB box); `--reduced`
+compiles the reduced arch variant, which preserves the *relative*
+collective-bytes deltas between comm configs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+# MUST be first repro import: dryrun pins XLA's host platform device
+# count to 512 before jax initializes.
+from repro.launch import dryrun  # noqa: I001
+
+from benchmarks.common import print_table
+from repro.experiments import get_scenario, list_scenarios
+
+# registry scenarios whose comm configs are worth pricing on the mesh
+# (paper/fig3-noniid1 carries the default wire = the dense baseline)
+DEFAULT_SCENARIOS = [
+    "paper/fig3-noniid1",
+    "low-bandwidth-int4",
+    "low-bandwidth-topk",
+    "lossy-uplink-erasure",
+    "byzantine-median",
+    "adaptive-tiers",
+]
+
+
+def run(arch: str = "smollm-360m", shape: str = "train_4k",
+        scenarios: list[str] | None = None, save_hlo: bool = False,
+        reduced: bool = False) -> dict:
+    scenarios = scenarios or DEFAULT_SCENARIOS
+    real_get_arch = dryrun.get_arch
+    if reduced:
+        # compile the reduced arch variant: relative collective-bytes
+        # deltas between comm configs survive the shrink, and the full
+        # 512-device multi-pod SPMD program stays the thing being priced
+        # (full-size compiles need ~all of a 128 GB host)
+        dryrun.get_arch = lambda name: real_get_arch(name).reduced()
+    rows, recs = [], {}
+    baseline_bytes = None
+    try:
+        for name in scenarios:
+            comm = get_scenario(name).comm
+            tag = "__comm-" + name.replace("/", "-") + (
+                "-reduced" if reduced else "")
+            rec = dryrun.run_one(arch, shape, "multi", algorithm="mdsl",
+                                 save_hlo=save_hlo, tag=tag, comm=comm)
+            recs[name] = rec
+            if not rec.get("ok"):
+                rows.append([name, "FAIL", rec.get("error", "?")[:40],
+                             "", ""])
+                continue
+            coll = rec["collectives"]["total_bytes"]
+            # deltas are only meaningful against the named baseline
+            # scenario (scenarios[0]); if that one failed, report n/a
+            # rather than silently re-baselining on a later config
+            if name == scenarios[0]:
+                baseline_bytes = coll
+            delta = (f"{(coll - baseline_bytes) / baseline_bytes:+.1%}"
+                     if baseline_bytes else "n/a")
+            rows.append([
+                name,
+                f"{coll / 2**30:.3f}GiB",
+                delta,
+                f"{rec['flops_per_device'] / 1e12:.2f}T",
+                rec["roofline"]["dominant"]])
+            print(f"  {name}: collectives {coll / 2**30:.3f} GiB "
+                  f"({delta} vs {scenarios[0]})", flush=True)
+    finally:
+        dryrun.get_arch = real_get_arch
+
+    print_table(
+        ["scenario", "collective bytes/dev", f"delta vs {scenarios[0]}",
+         "flops/dev", "bound"],
+        rows,
+        f"512-device dry-run comm sweep — {arch} / {shape} (multi-pod)")
+
+    out = {"arch": arch, "shape": shape, "mesh": "multi",
+           "reduced": reduced, "baseline_scenario": scenarios[0],
+           "baseline_ok": baseline_bytes is not None,
+           "scenarios": {n: {k: r[k] for k in
+                             ("ok", "comm", "collectives",
+                              "flops_per_device", "roofline")
+                             if k in r} | (
+                             {"error": r["error"]} if "error" in r else {})
+                         for n, r in recs.items()}}
+    dryrun.ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    path = dryrun.ARTIFACT_DIR / ("comm_scenarios_reduced.json" if reduced
+                                  else "comm_scenarios.json")
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--shape", default="train_4k",
+                    choices=["train_4k", "prefill_32k", "decode_32k"])
+    ap.add_argument("--scenarios", default=None,
+                    help=f"comma list (default {','.join(DEFAULT_SCENARIOS)};"
+                         f" registry: {','.join(list_scenarios())})")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced arch variant (fits small hosts; "
+                         "relative deltas preserved)")
+    args = ap.parse_args()
+    run(arch=args.arch, shape=args.shape,
+        scenarios=args.scenarios.split(",") if args.scenarios else None,
+        save_hlo=args.save_hlo, reduced=args.reduced)
+
+
+if __name__ == "__main__":
+    main()

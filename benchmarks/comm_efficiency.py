@@ -4,11 +4,13 @@ FedAvg uploads C dense models per round; M-DSL uploads only the Eq.-6
 selected subset — and with `repro.comm` the payload itself shrinks
 (top-k / int8 / int4 with error feedback), the downlink broadcast can
 be quantized with PS-side error feedback, and the PS can assign wire
-tiers per worker from the Eq.-5 rank. This benchmark sweeps
-algorithms x compressors under a chosen aggregator / downlink config
-and reports accuracy-vs-total-bytes (up + down) trade-off curves, plus
-a Byzantine sweep showing where median / trimmed-mean aggregation
-retains accuracy while the masked mean degrades.
+tiers per worker from the Eq.-5 rank. This benchmark is a thin client
+of the scenario registry: the base spec is `paper/fig3-noniid1`, and
+every swept axis (algorithm, compressor, aggregator, attack) is a
+dotted-path override. It reports accuracy-vs-total-bytes (up + down)
+trade-off curves, plus a Byzantine sweep showing where median /
+trimmed-mean aggregation retains accuracy while the masked mean
+degrades.
 
 Usage:
   python -m benchmarks.comm_efficiency --aggregator median \\
@@ -20,15 +22,19 @@ from __future__ import annotations
 import argparse
 
 from benchmarks.common import print_table, save_record
-from repro.comm import AGGREGATORS, COMPRESSORS, CommConfig
-from repro.launch.train import run_paper_experiment
+from repro.comm import AGGREGATORS, COMPRESSORS
+from repro.experiments import ExperimentSpec, get_scenario, override
+from repro.experiments import run as run_spec
 
 SWEEP = [
-    ("identity", CommConfig()),
-    ("topk5%", CommConfig(compressor="topk", topk_ratio=0.05)),
-    ("int8", CommConfig(compressor="int8")),
-    ("int4", CommConfig(compressor="int4")),
+    ("identity", ("comm.compressor=identity",)),
+    ("topk5%", ("comm.compressor=topk", "comm.topk_ratio=0.05")),
+    ("int8", ("comm.compressor=int8",)),
+    ("int4", ("comm.compressor=int4",)),
 ]
+
+QUICK = ("run.rounds=8", "model.width_mult=2", "data.num_workers=10",
+         "data.n_local=256", "algo.hp.learning_rate=0.05")
 
 
 def rounds_to(acc_curve: list[float], target: float) -> int | None:
@@ -48,38 +54,48 @@ def bytes_to(acc_curve: list[float], bytes_total: list[float],
     return None
 
 
-def _run_one(algo: str, comm: CommConfig, *, rounds: int, workers: int,
-             width: int, quick: bool, dataset: str, seed: int) -> dict:
-    r = run_paper_experiment(
-        algorithm=algo, case="noniid1", dataset=dataset, rounds=rounds,
-        num_workers=workers, width_mult=width, local_epochs=2,
-        n_local=256 if quick else 512, lr=0.05 if quick else 0.01,
-        velocity_clip=0.1, seed=seed, comm=comm, verbose=False)
+def base_spec(*, quick: bool, dataset: str, seed: int, aggregator: str,
+              downlink_compressor: str, adaptive_bits: bool
+              ) -> ExperimentSpec:
+    spec = get_scenario("paper/fig3-noniid1")
+    if quick:
+        spec = override(spec, *QUICK)
+    return override(spec, "algo.local_epochs=2",
+                    f"data.dataset={dataset}", f"run.seed={seed}",
+                    f"comm.aggregator={aggregator}",
+                    f"comm.downlink_compressor={downlink_compressor}",
+                    f"comm.adaptive_bits={adaptive_bits}").validate()
+
+
+def _run_one(spec: ExperimentSpec, *overrides: str) -> dict:
+    r = run_spec(override(spec, *overrides) if overrides else spec,
+                 verbose=False).record
     r["total_bytes"] = r["total_bytes_up"] + r["total_bytes_down"]
     r["bytes_total"] = [u + d for u, d in zip(r["bytes_up"],
                                               r["bytes_down"])]
     return r
 
 
-def byzantine_sweep(*, rounds: int, workers: int, width: int, quick: bool,
-                    dataset: str, seed: int, byzantine: int,
-                    comm: CommConfig) -> dict:
+def byzantine_sweep(spec: ExperimentSpec, byzantine: int) -> dict:
     """Robust-aggregation comparison under attack: FedAvg (every worker
     aggregated — the worst-case exposure) with `byzantine` adversarial
     workers, across Eq.-7 aggregators. Selection-based M-DSL is the
     paper's defense; median / trimmed mean are the aggregation-level
     defense that also protects the no-selection baseline."""
+    workers = spec.data.num_workers
     # a trimmed mean only tolerates what it trims: cut at least the
     # attacked fraction from each end
-    trim = min(max(comm.trim_ratio, byzantine / workers), 0.45)
-    attack = comm._replace(byzantine=byzantine, byzantine_mode="gaussian",
-                           byzantine_scale=25.0, trim_ratio=trim)
-    out = {"byzantine": byzantine, "attack": attack._asdict(), "runs": {}}
+    trim = min(max(spec.comm.trim_ratio, byzantine / workers), 0.45)
+    attack = override(spec, f"comm.byzantine={byzantine}",
+                      "comm.byzantine_mode=gaussian",
+                      "comm.byzantine_scale=25.0",
+                      f"comm.trim_ratio={trim}")
+    out = {"byzantine": byzantine, "attack": attack.comm._asdict(),
+           "runs": {}}
     rows = []
     for agg in AGGREGATORS:
-        r = _run_one("fedavg", attack._replace(aggregator=agg),
-                     rounds=rounds, workers=workers, width=width,
-                     quick=quick, dataset=dataset, seed=seed)
+        r = _run_one(attack, "algo.algorithm=fedavg",
+                     f"comm.aggregator={agg}")
         out["runs"][agg] = {"final_acc": r["final_acc"],
                             "best_acc": r["best_acc"], "acc": r["acc"],
                             "total_bytes": r["total_bytes"]}
@@ -88,9 +104,7 @@ def byzantine_sweep(*, rounds: int, workers: int, width: int, quick: bool,
                      f"{r['total_bytes'] / 2**20:.2f}MiB"])
     # the paper's selection defense, for reference: plain-mean Eq. 7 so
     # the row isolates selection (not selection + robust aggregation)
-    r = _run_one("mdsl", attack._replace(aggregator="mean"), rounds=rounds,
-                 workers=workers, width=width, quick=quick, dataset=dataset,
-                 seed=seed)
+    r = _run_one(attack, "algo.algorithm=mdsl", "comm.aggregator=mean")
     out["runs"]["mdsl_selection"] = {"final_acc": r["final_acc"],
                                      "best_acc": r["best_acc"],
                                      "acc": r["acc"],
@@ -107,21 +121,16 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
         algorithms: tuple[str, ...] = ("fedavg", "mdsl"),
         aggregator: str = "mean", downlink_compressor: str = "identity",
         adaptive_bits: bool = False, byzantine: int = 2) -> dict:
-    rounds = 8 if quick else 20
-    width = 2 if quick else 8
-    workers = 10 if quick else 50
-    base = CommConfig(aggregator=aggregator,
-                      downlink_compressor=downlink_compressor,
-                      adaptive_bits=adaptive_bits).validate()
-    sweep = [(name, base._replace(compressor=c.compressor,
-                                  topk_ratio=c.topk_ratio))
-             for name, c in SWEEP]
-    kw = dict(rounds=rounds, workers=workers, width=width, quick=quick,
-              dataset=dataset, seed=seed)
+    base = base_spec(quick=quick, dataset=dataset, seed=seed,
+                     aggregator=aggregator,
+                     downlink_compressor=downlink_compressor,
+                     adaptive_bits=adaptive_bits)
+    rounds, workers = base.run.rounds, base.data.num_workers
     recs = {}
     for algo in algorithms:
-        for cname, comm in sweep:
-            recs[(algo, cname)] = _run_one(algo, comm, **kw)
+        for cname, ovr in SWEEP:
+            recs[(algo, cname)] = _run_one(base, f"algo.algorithm={algo}",
+                                           *ovr)
 
     # baselines: dense FedAvg when it ran, else the first algorithm's
     # identity run (run() accepts any algorithm subset)
@@ -199,8 +208,7 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
                "delivered": r["delivered"],
            } for (a, c), r in recs.items()}})
     if byzantine > 0:
-        rec["byzantine_sweep"] = byzantine_sweep(byzantine=byzantine,
-                                                 comm=base, **kw)
+        rec["byzantine_sweep"] = byzantine_sweep(base, byzantine)
     save_record("comm_efficiency", rec)
     return rec
 

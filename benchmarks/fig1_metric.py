@@ -19,7 +19,6 @@ from benchmarks.common import print_table, save_record
 from repro.core import noniid
 from repro.data import partition
 from repro.data.synthetic import MNIST_LIKE, CIFAR_LIKE
-from repro.launch.train import run_paper_experiment
 
 ALPHAS_QUICK = [0.01, 0.1, 0.5, 1.0, 10.0, 100.0]
 ALPHAS_FULL = [0.001, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 100.0, 1000.0]
@@ -84,20 +83,17 @@ def run(quick: bool = True, dataset: str = "mnist_like",
 
 
 def _fedavg_at(alpha, dataset, num_workers, rounds, seed, n_local=256):
-    """FedAvg on a Dirichlet(alpha) fleet (case machinery bypassed)."""
-    from repro.launch import train as train_mod
-    orig = train_mod.CASES["noniid1"]
-    train_mod.CASES["noniid1"] = (
-        lambda key, C, spec, n: partition.dirichlet_partition(
-            key, C, alpha, spec, n_local=n))
-    try:
-        return run_paper_experiment(
-            algorithm="fedavg", case="noniid1", dataset=dataset,
-            rounds=rounds, num_workers=num_workers, width_mult=2,
-            local_epochs=2, n_local=n_local, lr=0.05, seed=seed,
-            verbose=False)
-    finally:
-        train_mod.CASES["noniid1"] = orig
+    """FedAvg on a Dirichlet(alpha) fleet: alpha is a first-class spec
+    axis (data.alpha) — no case-table monkeypatching needed."""
+    from repro.experiments import override
+    from repro.experiments import run as run_spec
+    from repro.experiments.runner import spec_from_paper_kwargs
+    spec = spec_from_paper_kwargs(
+        algorithm="fedavg", case="noniid1", dataset=dataset, rounds=rounds,
+        num_workers=num_workers, width_mult=2, local_epochs=2,
+        n_local=n_local, lr=0.05, seed=seed)
+    return run_spec(override(spec, f"data.alpha={alpha}"),
+                    verbose=False).record
 
 
 if __name__ == "__main__":

@@ -1,6 +1,10 @@
 """Paper Fig. 3: classification accuracy of FedAvg / DSL / Multi-DSL /
 M-DSL under iid, non-iid-I (Dir 0.5) and non-iid-II (mixed fleet).
 
+A thin client of the scenario registry: each case is the
+`paper/fig3-<case>` preset, the algorithm axis and the quick-mode
+shrink are dotted-path overrides on the spec.
+
 Claims validated:
   * iid is the ceiling all methods approach;
   * under non-iid data M-DSL converges faster and reaches higher accuracy
@@ -11,27 +15,33 @@ Claims validated:
 from __future__ import annotations
 
 from benchmarks.common import print_table, save_record
-from repro.launch.train import run_paper_experiment
+from repro.experiments import get_scenario, override
+from repro.experiments import run as run_spec
 
 ALGOS = ["fedavg", "dsl", "multi_dsl", "mdsl"]
 CASES = ["iid", "noniid1", "noniid2"]
+
+QUICK = ("run.rounds=8", "model.width_mult=2", "algo.local_epochs=1",
+         "data.num_workers=10", "data.n_local=256",
+         "algo.hp.learning_rate=0.05")
+
+
+def case_spec(case: str, quick: bool, dataset: str, seed: int):
+    spec = get_scenario(f"paper/fig3-{case}")
+    if quick:
+        spec = override(spec, *QUICK)
+    return override(spec, f"data.dataset={dataset}", f"run.seed={seed}")
 
 
 def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0
         ) -> dict:
     rounds = 8 if quick else 20
-    width = 2 if quick else 8
-    epochs = 1 if quick else 4
-    workers = 10 if quick else 50
-    n_local = 256 if quick else 512
     results: dict = {}
     for case in CASES:
+        spec = case_spec(case, quick, dataset, seed)
         for algo in ALGOS:
-            rec = run_paper_experiment(
-                algorithm=algo, case=case, dataset=dataset, rounds=rounds,
-                num_workers=workers, width_mult=width, local_epochs=epochs,
-                n_local=n_local, lr=0.05 if quick else 0.01,
-                velocity_clip=0.1, seed=seed, verbose=False)
+            rec = run_spec(override(spec, f"algo.algorithm={algo}"),
+                           verbose=False).record
             results[f"{algo}/{case}"] = {
                 "acc_curve": rec["acc"], "final_acc": rec["final_acc"],
                 "best_acc": rec["best_acc"],

@@ -1,7 +1,8 @@
-"""End-to-end edge-IoT driver: trains M-DSL vs FedAvg on the paper's
-heterogeneous fleet (non-iid case II, Fig. 2 — mixed Dirichlet alphas),
-prints convergence curves and the communication saving, and checkpoints
-the winning global model.
+"""End-to-end edge-IoT comparison on the scenario registry: M-DSL vs
+FedAvg on the paper's heterogeneous fleet (non-iid case II, Fig. 2 —
+mixed Dirichlet alphas). One preset, one override per algorithm, one
+`run()` each; prints convergence curves and the communication saving,
+and checkpoints the winning global model.
 
     PYTHONPATH=src python examples/edge_iot_noniid.py [--rounds 8]
     [--workers 10] [--dataset mnist_like]
@@ -10,7 +11,7 @@ import argparse
 from pathlib import Path
 
 from repro.checkpoint import CheckpointManager
-from repro.launch.train import run_paper_experiment
+from repro.experiments import get_scenario, override, run
 
 
 def ascii_curve(vals, width=40, lo=0.0, hi=1.0):
@@ -29,14 +30,17 @@ def main():
     ap.add_argument("--width-mult", type=int, default=2)
     args = ap.parse_args()
 
+    base = override(get_scenario("edge-iot/noniid2"),
+                    f"run.rounds={args.rounds}",
+                    f"data.num_workers={args.workers}",
+                    f"data.dataset={args.dataset}",
+                    f"model.width_mult={args.width_mult}")
+
     runs = {}
     for algo in ["fedavg", "mdsl"]:
         print(f"\n=== {algo} on non-iid case II "
               f"({args.workers} workers) ===")
-        runs[algo] = run_paper_experiment(
-            algorithm=algo, case="noniid2", dataset=args.dataset,
-            rounds=args.rounds, num_workers=args.workers,
-            width_mult=args.width_mult, local_epochs=1, n_local=256)
+        runs[algo] = run(override(base, f"algo.algorithm={algo}")).record
 
     for algo, rec in runs.items():
         print(f"\n{algo} accuracy per round:")

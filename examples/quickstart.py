@@ -1,51 +1,32 @@
-"""Quickstart: the paper's pipeline end-to-end in ~60 lines.
+"""Quickstart: the paper's pipeline through the experiment front door.
 
-Builds a small non-i.i.d. edge fleet, computes the non-i.i.d. degree
-metric (Eq. 2), then runs a few M-DSL communication rounds (Algorithm 1)
-and prints the selection behaviour and global-model accuracy.
+Every run is a declarative `ExperimentSpec`: look a scenario up in the
+registry, `override()` the axes you care about, `run()` it. The result
+carries the full spec next to the metrics, so it can be re-run or
+swept verbatim.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
+from repro.experiments import get_scenario, override, run, to_dict
 
-from repro.configs.paper_cnn import paper_cnn
-from repro.core import losses, mdsl, noniid
-from repro.core.mdsl import MdslConfig
-from repro.core.pso import PsoHyperParams
-from repro.data import partition
-from repro.data.synthetic import MNIST_LIKE
+# --- 1. a named scenario: 8-worker non-iid fleet, small paper CNN ----------
+spec = get_scenario("quickstart")
+print("scenario:", spec.name, "->", to_dict(spec)["data"])
 
-C, ROUNDS = 8, 4
+# --- 2. tweak one axis the declarative way (sweeps are just strings) -------
+spec = override(spec, "run.rounds=4", "comm.compressor=int8")
 
-# --- 1. a heterogeneous edge fleet: Dirichlet(alpha=0.1) label skew -------
-data = partition.dirichlet_partition(
-    jax.random.PRNGKey(0), C, alpha=0.1, spec=MNIST_LIKE, n_local=256)
+# --- 3. run it: M-DSL rounds (Algorithm 1) with selection + wire metrics ---
+result = run(spec)
 
-# --- 2. the non-i.i.d. degree metric (Eq. 2) -------------------------------
-eta = noniid.noniid_degree_from_labels(data.y, data.global_y,
-                                       MNIST_LIKE.num_classes)
+rec = result.record
+print(f"\nmodel: {rec['model']}, {rec['n_params']:,} params, "
+      f"{rec['num_workers']} workers")
 print("per-worker non-i.i.d. degree eta:",
-      [f"{float(e):.2f}" for e in eta])
-
-# --- 3. M-DSL training (Algorithm 1) ---------------------------------------
-model = paper_cnn(MNIST_LIKE, width_mult=2)
-loss_fn = lambda p, x, y: losses.cross_entropy_loss(model.apply(p, x), y, 10)
-eval_fn = lambda p, x, y: losses.rmse_loss(model.apply(p, x), y, 10)  # Eq. 3
-
-cfg = MdslConfig(algorithm="mdsl", tau=0.9, local_epochs=1, batch_size=64,
-                 hp=PsoHyperParams(learning_rate=0.01, velocity_clip=1.0))
-state = mdsl.init_state(jax.random.PRNGKey(1), model.init, C, eta)
-n_params = mdsl.count_params(state.global_params)
-print(f"model: {model.name}, {n_params:,} params, {C} workers")
-
-key = jax.random.PRNGKey(2)
-for t in range(ROUNDS):
-    key, rkey = jax.random.split(key)
-    state, m = mdsl.mdsl_round(state, data.x, data.y, data.global_x,
-                               data.global_y, rkey, loss_fn=loss_fn,
-                               eval_fn=eval_fn, cfg=cfg, n_params=n_params)
-    acc = losses.accuracy(model.apply(state.global_params, data.test_x),
-                          data.test_y)
-    sel = [i for i, s in enumerate(m.mask) if s > 0]
-    print(f"round {t + 1}: global acc {float(acc):.3f}  "
-          f"D_g loss {float(m.global_loss):.3f}  selected {sel}")
+      [f"{e:.2f}" for e in rec["eta"]])
+for t, (acc, sel) in enumerate(zip(rec["acc"], rec["selected"])):
+    print(f"round {t + 1}: global acc {acc:.3f}  "
+          f"selected {sel}/{rec['num_workers']}  "
+          f"up {rec['bytes_up'][t] / 2**10:.0f} KiB")
+print(f"final acc {rec['final_acc']:.3f}, compression "
+      f"{rec['compression_ratio']:.1f}x vs dense uplink")

@@ -19,8 +19,9 @@ the flags and `benchmarks/comm_efficiency.py` sweeps the trade-off.
 from repro.comm.budget import (AGGREGATORS, BYZANTINE_MODES, CHANNELS,
                                COMPRESSORS, CommConfig, CommRecord,
                                degrade, dense_bytes, downlink_config,
-                               leaf_payload_bytes, payload_bytes,
-                               round_record, topk_count, uplink_tiers)
+                               host_round_bytes, leaf_payload_bytes,
+                               payload_bytes, round_record, topk_count,
+                               uplink_tiers)
 from repro.comm.channel import (corrupt_local_updates, erasure_mask,
                                 receive)
 # NOTE: the compress *function* is deliberately not re-exported — it
@@ -31,7 +32,8 @@ from repro.comm.compress import (compress_with_ef, init_residual,
 __all__ = ["AGGREGATORS", "BYZANTINE_MODES", "CHANNELS", "COMPRESSORS",
            "CommConfig", "CommRecord", "compress_with_ef",
            "corrupt_local_updates", "degrade", "dense_bytes",
-           "downlink_config", "erasure_mask", "init_residual",
+           "downlink_config", "erasure_mask", "host_round_bytes",
+           "init_residual",
            "leaf_payload_bytes", "payload_bytes", "receive",
            "round_record", "select_residual", "topk_count",
            "uplink_tiers"]

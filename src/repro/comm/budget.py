@@ -168,6 +168,22 @@ def uplink_tiers(cfg: CommConfig) -> tuple[CommConfig, ...]:
     return (cfg,) if low == cfg else (cfg, low)
 
 
+def host_round_bytes(cfg: CommConfig, *, selected, bytes_up_jit,
+                     payload_up: int, payload_down: int,
+                     num_workers: int) -> tuple[float, int]:
+    """Exact host-side (bytes_up, bytes_down) for one round's metrics
+    record. The in-jit CommRecord is f32 telemetry that drifts above
+    2^24 bytes (~16 MiB), so the uplink is recomputed from exact ints —
+    selected transmitters x the Python-int payload — except under
+    adaptive tiers, where workers mix per-tier payloads and the in-jit
+    accounting is the only per-assignment truth. Used by the experiment
+    runner for both the paper and mesh drivers (previously duplicated in
+    each)."""
+    up = (float(bytes_up_jit) if cfg.adaptive_bits
+          else int(selected) * payload_up)
+    return up, num_workers * payload_down
+
+
 def round_record(cfg: CommConfig, params: PyTree, num_workers: int,
                  mask: Array, mask_eff: Array,
                  tier_lo: Array = None) -> CommRecord:

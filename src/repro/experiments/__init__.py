@@ -1,0 +1,35 @@
+"""repro.experiments — declarative experiment specs, scenario registry,
+and the single `run()` front door.
+
+The paper's §V evaluation grid (algorithm x partition case x dataset x
+comm channel), plus the related work's Byzantine and channel-aware
+axes, as typed data:
+
+  spec.py      frozen `ExperimentSpec` dataclass tree with validate(),
+               JSON round-trip (to_dict/from_dict), and dotted-path
+               override("comm.compressor=topk") for sweeps
+  registry.py  named presets (paper/fig3-*, byzantine-*, low-bandwidth,
+               lossy/noisy uplink, adaptive tiers, mesh smokes) behind
+               list_scenarios()/get_scenario()
+  runner.py    build(spec)/run(spec)->RunResult/sweep(specs) subsuming
+               the legacy launch/train.py drivers (kept as shims)
+
+Typical use:
+
+    from repro.experiments import get_scenario, override, run
+    result = run(override(get_scenario("paper/fig3-noniid1"),
+                          "run.rounds=2", "comm.compressor=int8"))
+"""
+from repro.experiments.registry import (describe_scenarios, get_scenario,
+                                        list_scenarios, register_scenario)
+from repro.experiments.runner import (Prepared, RunResult, build,
+                                      default_out, run, sweep)
+from repro.experiments.spec import (AlgoSpec, DataSpec, ExperimentSpec,
+                                    ModelSpec, RunSpec, from_dict, override,
+                                    to_dict)
+
+__all__ = ["AlgoSpec", "DataSpec", "ExperimentSpec", "ModelSpec",
+           "Prepared", "RunResult", "RunSpec", "build", "default_out",
+           "describe_scenarios", "from_dict", "get_scenario",
+           "list_scenarios", "override", "register_scenario", "run",
+           "sweep", "to_dict"]

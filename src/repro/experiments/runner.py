@@ -1,0 +1,425 @@
+"""`run(spec) -> RunResult`: one facade over both training drivers.
+
+The paper driver (C-worker image fleet, `core/mdsl.py`) and the mesh
+driver (reduced assigned arch on the active devices, `core/swarm_dist`)
+used to live as two hand-wired functions in `launch/train.py` with ~18
+positional kwargs each; this module is their single spec-driven home:
+
+    build(spec)   -> Prepared   data/model/state + a uniform step fn
+    run(spec)     -> RunResult  the full metrics record (legacy format)
+    sweep(specs)  -> [RunResult] scenarios x seeds, artifacts embedding
+                                 the full spec
+
+The legacy entry points (`run_paper_experiment`, `run_mesh_training`)
+survive as thin deprecated shims in `launch/train.py`, golden-pinned to
+emit byte-identical metrics (modulo timing) on the default path.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.budget import (dense_bytes, downlink_config,
+                               host_round_bytes, payload_bytes)
+from repro.data import partition
+from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
+from repro.experiments.spec import ExperimentSpec, override, to_dict
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def _noniid2_groups(C: int) -> list[tuple[int, float]]:
+    """Fig. 2 fleet (20 @ 0.1, 15 @ 0.5, 10 @ 1.0, 5 @ 10.0), scaled
+    proportionally to C workers (quick-mode benchmarks use C < 50)."""
+    fracs = [(0.4, 0.1), (0.3, 0.5), (0.2, 1.0), (0.1, 10.0)]
+    counts = [max(1, round(f * C)) for f, _ in fracs]
+    counts[0] += C - sum(counts)  # absorb rounding into the largest group
+    return [(c, a) for c, (_, a) in zip(counts, fracs)]
+
+
+def _dirichlet(alpha: float):
+    return lambda key, C, spec, n: partition.dirichlet_partition(
+        key, C, alpha, spec, n_local=n)
+
+
+# mutable on purpose: legacy callers (benchmarks/fig1_metric.py) used to
+# monkeypatch entries; new code sets DataSpec.alpha instead
+CASES = {
+    "iid": lambda key, C, spec, n: partition.iid_partition(
+        key, C, spec, n_local=n),
+    "noniid1": _dirichlet(0.5),
+    "noniid2": lambda key, C, spec, n: partition.mixed_dirichlet_partition(
+        key, _noniid2_groups(C), spec, n_local=n),
+}
+IMAGE_SPECS = {"mnist_like": MNIST_LIKE, "cifar_like": CIFAR_LIKE}
+
+
+def make_case_data(case: str, dataset: str, num_workers: int, seed: int,
+                   n_local: int = 512, alpha: Optional[float] = None):
+    """Partitioned fleet data for one case. `alpha` overrides the
+    Dirichlet concentration of the noniid1 case (DataSpec.alpha)."""
+    spec = IMAGE_SPECS[dataset]
+    case_fn = (_dirichlet(alpha) if case == "noniid1" and alpha is not None
+               else CASES[case])
+    return case_fn(jax.random.PRNGKey(seed), num_workers, spec, n_local), spec
+
+
+class Prepared(NamedTuple):
+    """A built (but not yet run) experiment: everything `run` loops over.
+
+    `step(state, key) -> (state, telemetry, key)` advances one
+    communication round, consuming randomness exactly as the legacy
+    drivers did (so default-path runs stay golden-pinned)."""
+    spec: ExperimentSpec
+    state: Any
+    step: Callable[[Any, jax.Array], tuple[Any, Any, jax.Array]]
+    key: jax.Array
+    n_params: int
+    aux: dict
+
+
+class RunResult(NamedTuple):
+    """A finished run: the spec that produced it + the metrics record
+    (the record is the legacy metrics-JSON dict, unchanged)."""
+    spec: ExperimentSpec
+    record: dict
+
+    def to_dict(self) -> dict:
+        return {"spec": to_dict(self.spec), "metrics": self.record}
+
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_dict(), indent=1))
+        return path
+
+
+# ---------------------------------------------------------------------------
+# Paper driver (§V: C edge workers on partitioned synthetic image data)
+# ---------------------------------------------------------------------------
+
+def _prepare_paper(spec: ExperimentSpec) -> Prepared:
+    from repro.configs.paper_cnn import paper_cnn, paper_resnet
+    from repro.core import losses as losses_mod
+    from repro.core import mdsl, noniid
+    from repro.core.mdsl import MdslConfig
+
+    d, a, r = spec.data, spec.algo, spec.run
+    data, img_spec = make_case_data(d.case, d.dataset, d.num_workers,
+                                    r.seed, d.n_local, alpha=d.alpha)
+    img_model = (paper_cnn(img_spec, spec.model.width_mult)
+                 if spec.model.name == "cnn"
+                 else paper_resnet(img_spec, spec.model.width_mult))
+    L = img_spec.num_classes
+
+    loss_fn = lambda p, x, y: losses_mod.cross_entropy_loss(
+        img_model.apply(p, x), y, L)
+    eval_fn = lambda p, x, y: losses_mod.rmse_loss(  # Eq. 3 scoring on D_g
+        img_model.apply(p, x), y, L)
+
+    coeffs = (noniid.EtaCoefficients(*d.eta_coeffs) if d.eta_coeffs
+              else (noniid.MNIST_COEFFS if d.dataset == "mnist_like"
+                    else noniid.CIFAR10_COEFFS))
+    eta = noniid.noniid_degree_from_labels(data.y, data.global_y, L, coeffs)
+
+    cfg = MdslConfig(algorithm=a.algorithm, tau=a.tau,
+                     local_epochs=a.local_epochs, batch_size=a.batch_size,
+                     hp=a.hp, comm=spec.comm)
+    key = jax.random.PRNGKey(r.seed + 1)
+    state = mdsl.init_state(key, img_model.init, d.num_workers, eta)
+    n_params = mdsl.count_params(state.global_params)
+
+    @jax.jit
+    def test_accuracy(params):
+        return losses_mod.accuracy(img_model.apply(params, data.test_x),
+                                   data.test_y)
+
+    def step(state, key):
+        key, rkey = jax.random.split(key)
+        state, metrics = mdsl.mdsl_round(
+            state, data.x, data.y, data.global_x, data.global_y, rkey,
+            loss_fn=loss_fn, eval_fn=eval_fn, cfg=cfg, n_params=n_params)
+        return state, metrics, key
+
+    return Prepared(spec=spec, state=state, step=step, key=key,
+                    n_params=n_params,
+                    aux={"data": data, "model": img_model, "eta": eta,
+                         "cfg": cfg, "test_accuracy": test_accuracy})
+
+
+def _run_paper(prep: Prepared, verbose: bool) -> dict:
+    spec, comm = prep.spec, prep.spec.comm
+    d, a, r = spec.data, spec.algo, spec.run
+    state, key = prep.state, prep.key
+    test_accuracy = prep.aux["test_accuracy"]
+    record = {"algorithm": a.algorithm, "case": d.case, "dataset": d.dataset,
+              "model": prep.aux["model"].name, "rounds": r.rounds,
+              "num_workers": d.num_workers, "tau": a.tau, "seed": r.seed,
+              "n_params": prep.n_params,
+              "eta": np.asarray(prep.aux["eta"]).tolist(),
+              "comm": comm._asdict(),
+              "payload_bytes_per_worker": payload_bytes(
+                  comm, state.global_params),
+              "dense_bytes_per_worker": dense_bytes(state.global_params),
+              "downlink_bytes_per_worker": payload_bytes(
+                  downlink_config(comm), state.global_params),
+              "acc": [], "global_loss": [], "selected": [], "delivered": [],
+              "uploaded_params": [], "bytes_up": [], "bytes_down": [],
+              "round_time_s": []}
+
+    metrics = None
+    for t in range(r.rounds):
+        t0 = time.time()
+        state, metrics, key = prep.step(state, key)
+        acc = float(test_accuracy(state.global_params))
+        record["acc"].append(acc)
+        record["global_loss"].append(float(metrics.global_loss))
+        record["selected"].append(int(metrics.selected_count))
+        record["delivered"].append(int(metrics.delivered_count))
+        record["uploaded_params"].append(float(metrics.uploaded_params))
+        up, down = host_round_bytes(
+            comm, selected=metrics.selected_count,
+            bytes_up_jit=metrics.bytes_up,
+            payload_up=record["payload_bytes_per_worker"],
+            payload_down=record["downlink_bytes_per_worker"],
+            num_workers=d.num_workers)
+        record["bytes_up"].append(up)
+        record["bytes_down"].append(down)
+        record["round_time_s"].append(round(time.time() - t0, 2))
+        if verbose and (t % r.log_every == 0 or t == r.rounds - 1):
+            print(f"[{a.algorithm}/{d.case}/{d.dataset}] "
+                  f"round {t + 1}/{r.rounds} "
+                  f"acc={acc:.3f} loss={float(metrics.global_loss):.4f} "
+                  f"selected={int(metrics.selected_count)}/{d.num_workers} "
+                  f"up={float(metrics.bytes_up) / 2**20:.2f}MiB",
+                  flush=True)
+    record["final_acc"] = record["acc"][-1]
+    record["best_acc"] = max(record["acc"])
+    record["total_uploaded_params"] = float(sum(record["uploaded_params"]))
+    record["total_bytes_up"] = float(sum(record["bytes_up"]))
+    record["total_bytes_down"] = float(sum(record["bytes_down"]))
+    # adaptive tiers mix payloads per worker: the fleet-mean ratio comes
+    # from the in-jit accounting, matching the bytes_up column
+    record["compression_ratio"] = (
+        float(metrics.compression_ratio) if comm.adaptive_bits
+        else record["dense_bytes_per_worker"]
+        / record["payload_bytes_per_worker"])
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Mesh driver (production path: reduced assigned arch, jitted SPMD round)
+# ---------------------------------------------------------------------------
+
+def _prepare_mesh(spec: ExperimentSpec) -> Prepared:
+    from repro.configs.base import get_arch
+    from repro.core import swarm_dist
+    from repro.core.swarm_dist import DistSwarmConfig
+    from repro.models.transformer import Transformer
+
+    m, a, r = spec.model, spec.algo, spec.run
+    W = spec.data.num_workers
+    cfg = get_arch(m.name)
+    if m.reduced:
+        cfg = cfg.reduced()
+    model = Transformer(cfg)
+    dcfg = DistSwarmConfig(worker_axes=(), num_spatial=W,
+                           local_steps=a.local_steps, tau=a.tau,
+                           hp=a.hp, comm=spec.comm)
+    key = jax.random.PRNGKey(r.seed)
+    params = model.init(key)
+    state = swarm_dist.init_state(params, dcfg)
+    build = (swarm_dist.fedavg_train_step if a.algorithm == "fedavg"
+             else swarm_dist.build_train_step)
+    step_fn = jax.jit(build(model.loss, dcfg))
+
+    B, S = m.per_worker_batch, m.seq_len
+
+    def batch_for(k, lead):
+        toks = jax.random.randint(k, lead + (B, S), 0, cfg.vocab_size)
+        out = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+        if cfg.input_mode == "tokens+prefix":
+            out["prefix"] = jnp.zeros(lead + (B, cfg.prefix_len, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+        if cfg.encoder_layers:
+            out["frames"] = jax.random.normal(
+                k, lead + (B, cfg.encoder_memory_len, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return out
+
+    def step(state, key):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        state, info = step_fn(state, batch_for(k1, (W,)), batch_for(k2, ()),
+                              k3)
+        return state, info, key
+
+    from repro.core import rounds
+    return Prepared(spec=spec, state=state, step=step, key=key,
+                    n_params=rounds.count_params(params),
+                    aux={"model": model, "arch_cfg": cfg, "dcfg": dcfg,
+                         "params": params})
+
+
+def _run_mesh(prep: Prepared, verbose: bool) -> dict:
+    from repro.checkpoint import CheckpointManager
+
+    spec = prep.spec
+    m, r = spec.model, spec.run
+    dcfg = prep.aux["dcfg"]
+    W = spec.data.num_workers
+    state, key = prep.state, prep.key
+    mgr = CheckpointManager(r.ckpt_dir) if r.ckpt_dir else None
+
+    payload = payload_bytes(dcfg.comm, prep.aux["params"])
+    down_payload = payload_bytes(downlink_config(dcfg.comm),
+                                 prep.aux["params"])
+    record = {"arch": m.name, "reduced": m.reduced, "steps": r.rounds,
+              "comm": dcfg.comm._asdict(),
+              "payload_bytes_per_worker": payload,
+              "downlink_bytes_per_worker": down_payload, "global_loss": [],
+              "worker_losses": [], "selected": [], "delivered": [],
+              "bytes_up": [], "bytes_down": [], "step_time_s": []}
+    for i in range(r.rounds):
+        t0 = time.time()
+        state, info, key = prep.step(state, key)
+        gl = float(info.global_loss)
+        record["global_loss"].append(gl)
+        record["worker_losses"].append(np.asarray(info.losses).tolist())
+        record["selected"].append(float(info.mask.sum()))
+        record["delivered"].append(float(info.delivered))
+        up, down = host_round_bytes(
+            dcfg.comm, selected=info.mask.sum(), bytes_up_jit=info.bytes_up,
+            payload_up=payload, payload_down=down_payload, num_workers=W)
+        record["bytes_up"].append(up)
+        record["bytes_down"].append(down)
+        record["step_time_s"].append(round(time.time() - t0, 2))
+        if verbose:
+            print(f"[mesh/{m.name}] step {i + 1}/{r.rounds} "
+                  f"global_loss={gl:.4f} "
+                  f"selected={int(info.mask.sum())}/{W}", flush=True)
+        if mgr is not None:
+            mgr.save(i, state.global_params, metadata={"arch": m.name})
+    if mgr is not None:
+        record["ckpt_steps"] = mgr.all_steps()
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+def build(spec: ExperimentSpec) -> Prepared:
+    """Validate + materialize a spec into data/model/state and one
+    uniform `step` callable, without running any rounds."""
+    spec = spec.validate()
+    return (_prepare_paper(spec) if spec.model.kind == "paper"
+            else _prepare_mesh(spec))
+
+
+def run(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
+    """Execute a spec end-to-end: the single front door subsuming the
+    legacy `run_paper_experiment` / `run_mesh_training` drivers."""
+    prep = build(spec)
+    record = (_run_paper(prep, verbose) if spec.model.kind == "paper"
+              else _run_mesh(prep, verbose))
+    return RunResult(spec=prep.spec, record=record)
+
+
+def default_out(spec: ExperimentSpec) -> Path:
+    """Artifact path for one run. Scenario runs land under
+    artifacts/experiments/<name>__s<seed>.json; anonymous specs keep the
+    legacy artifacts/train naming."""
+    if spec.run.out:
+        return Path(spec.run.out)
+    if spec.name:
+        safe = spec.name.replace("/", "-")
+        return ARTIFACTS / "experiments" / f"{safe}__s{spec.run.seed}.json"
+    if spec.model.kind == "paper":
+        return (ARTIFACTS / "train" /
+                f"{spec.algo.algorithm}__{spec.data.case}"
+                f"__{spec.data.dataset}__s{spec.run.seed}.json")
+    return (ARTIFACTS / "train" /
+            f"mesh__{spec.model.name}__s{spec.run.seed}.json")
+
+
+def sweep(specs, seeds=(0,), out_dir: str | Path | None = None,
+          verbose: bool = False) -> list[RunResult]:
+    """Fan scenarios x seeds into consistently named artifacts, each
+    embedding the full spec next to its metrics. Any `run.out` on the
+    input specs is cleared: per-(scenario, seed) naming wins, so one
+    fixed path cannot clobber the rest of the sweep."""
+    results = []
+    for spec in specs:
+        for seed in seeds:
+            s = override(spec, f"run.seed={seed}", "run.out=none")
+            res = run(s, verbose=verbose)
+            path = default_out(s)
+            if out_dir is not None:
+                path = Path(out_dir) / path.name
+            res.save(path)
+            if not verbose:
+                name = s.name or f"{s.algo.algorithm}/{s.data.case}"
+                final = res.record.get("final_acc",
+                                       res.record["global_loss"][-1])
+                print(f"[sweep] {name} s{seed}: {final:.4f} -> {path}",
+                      flush=True)
+            results.append(res)
+    return results
+
+
+def spec_from_paper_kwargs(algorithm="mdsl", case="noniid1",
+                           dataset="mnist_like", rounds=20, num_workers=50,
+                           model="cnn", width_mult=8, tau=0.9,
+                           local_epochs=4, batch_size=64, lr=0.01,
+                           velocity_clip=0.1, seed=0, eta_coeffs=None,
+                           n_local=512, log_every=1,
+                           comm=None) -> ExperimentSpec:
+    """Map the legacy `run_paper_experiment(...)` kwargs onto a spec
+    (the deprecated shim and older callers route through this)."""
+    from repro.comm.budget import CommConfig
+    from repro.core.pso import PsoHyperParams
+    from repro.experiments.spec import (AlgoSpec, DataSpec, ModelSpec,
+                                        RunSpec)
+    return ExperimentSpec(
+        data=DataSpec(dataset=dataset, case=case, num_workers=num_workers,
+                      n_local=n_local,
+                      eta_coeffs=tuple(eta_coeffs) if eta_coeffs else None),
+        model=ModelSpec(kind="paper", name=model, width_mult=width_mult),
+        algo=AlgoSpec(algorithm=algorithm, tau=tau,
+                      local_epochs=local_epochs, batch_size=batch_size,
+                      hp=PsoHyperParams(learning_rate=lr,
+                                        velocity_clip=velocity_clip)),
+        comm=(comm or CommConfig()),
+        run=RunSpec(rounds=rounds, seed=seed, log_every=log_every))
+
+
+def spec_from_mesh_kwargs(arch, steps=5, reduced=True, seq_len=128,
+                          per_worker_batch=2, num_spatial=2, ckpt_dir=None,
+                          seed=0, comm=None) -> ExperimentSpec:
+    """Map the legacy `run_mesh_training(...)` kwargs onto a spec."""
+    from repro.comm.budget import CommConfig
+    from repro.core.pso import PsoHyperParams
+    from repro.experiments.spec import (AlgoSpec, DataSpec, ModelSpec,
+                                        RunSpec)
+    return ExperimentSpec(
+        data=DataSpec(num_workers=num_spatial),
+        model=ModelSpec(kind="mesh", name=arch, reduced=reduced,
+                        seq_len=seq_len, per_worker_batch=per_worker_batch),
+        algo=AlgoSpec(algorithm="mdsl", tau=0.9, local_steps=1,
+                      hp=PsoHyperParams(learning_rate=3e-3,
+                                        velocity_clip=1.0)),
+        comm=(comm or CommConfig()),
+        run=RunSpec(rounds=steps, seed=seed,
+                    ckpt_dir=str(ckpt_dir) if ckpt_dir else None))
+
+
+# dataclasses imported for callers composing specs around the runner
+__all__ = ["ARTIFACTS", "Prepared", "RunResult", "build", "run", "sweep",
+           "default_out", "make_case_data", "spec_from_paper_kwargs",
+           "spec_from_mesh_kwargs"]

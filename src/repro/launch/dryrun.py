@@ -69,17 +69,23 @@ def pair_is_applicable(arch_name: str, shape_name: str) -> tuple[bool, str]:
 
 def run_one(arch_name: str, shape_name: str, mesh_kind: str,
             algorithm: str = "mdsl", save_hlo: bool = True,
-            tag: str = "") -> dict:
+            tag: str = "", comm=None) -> dict:
+    """`comm` (a repro.comm.CommConfig, default wire when None) threads
+    compression/robust-aggregation/downlink configs into the lowered
+    step, so comm scenarios cost out on the 512-device model."""
     cfg = get_arch(arch_name)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
            "algorithm": algorithm, "devices": int(
                len(jax.devices())), "ok": False, "tag": tag}
+    if comm is not None:
+        rec["comm"] = comm._asdict()
     t0 = time.time()
     try:
         with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
-            built = build_step(cfg, shape, mesh, algorithm=algorithm)
+            built = build_step(cfg, shape, mesh, algorithm=algorithm,
+                               comm=comm)
             lowered = built.fn.lower(*built.args)
             t_lower = time.time() - t0
             compiled = lowered.compile()
@@ -87,6 +93,9 @@ def run_one(arch_name: str, shape_name: str, mesh_kind: str,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax returns one dict per device/computation
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             n_dev = len(jax.devices())
 

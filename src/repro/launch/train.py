@@ -1,89 +1,51 @@
-"""Training driver.
+"""Training driver — a thin CLI over `repro.experiments`.
 
-Two modes:
+The scenario registry is the front door:
 
-  paper  — the paper's experiment (§V): C=50 edge workers, 5-layer CNN or
-           compact ResNet on synthetic MNIST/CIFAR-like data partitioned
-           iid / non-iid-I (Dir 0.5) / non-iid-II (mixed fleet, Fig. 2),
-           algorithm in {fedavg, dsl, multi_dsl, mdsl}. Writes a metrics
-           JSON (accuracy curve, comm cost, selection trace) consumed by
-           benchmarks/fig3_accuracy.py and comm_efficiency.py.
+  python -m repro.launch.train --list-scenarios
+  python -m repro.launch.train --scenario paper/fig3-noniid1 \\
+      --set run.rounds=2 --set data.num_workers=8
+  python -m repro.launch.train --scenario mesh/smollm-smoke --steps 3
 
-  mesh   — the production path: a (reduced) assigned architecture driven
-           through core/swarm_dist.py's jitted SPMD round on the active
-           mesh, with checkpointing. On CPU this runs the same program
-           the dry-run lowers for 512 devices.
+Legacy flags still work and are mapped through the same spec (so every
+flag combination is expressible — and serializable — as an
+`ExperimentSpec`):
 
-Both modes thread a repro.comm CommConfig through the engine:
---compressor/--topk-ratio/--no-error-feedback, --channel/--drop-prob/
---snr-db, --byzantine/--byzantine-mode, --aggregator/--trim-ratio
-(robust Eq. 7), --downlink-compressor (quantized broadcast with PS-side
-error feedback), --adaptive-bits (per-worker wire tier from the Eq.-5
-rank). The config is validated at arg-parse time so bad flags fail
-fast, and the metrics JSON carries per-round bytes_up/bytes_down/
-delivered next to the accuracy curve.
-
-Usage:
   python -m repro.launch.train --mode paper --algorithm mdsl --case noniid2 \\
       --dataset cifar_like --rounds 40
-  python -m repro.launch.train --mode paper --algorithm mdsl --rounds 5 \\
-      --compressor topk --channel erasure
   python -m repro.launch.train --mode paper --byzantine 3 \\
       --aggregator median --downlink-compressor int8
   python -m repro.launch.train --mode mesh --arch smollm-360m --steps 5
+
+Precedence: scenario preset < explicit legacy flags < --set overrides.
+The spec is validated at arg-parse time so bad flags fail fast; the
+metrics JSON artifact embeds the full spec next to the metrics.
+
+`run_paper_experiment` / `run_mesh_training` remain as deprecated shims
+over `experiments.run` — golden-pinned (tests/test_experiments.py) to
+emit identical metrics on the default path.
 """
 from __future__ import annotations
 
 import argparse
-import json
-import time
-from pathlib import Path
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import CheckpointManager
 from repro.comm import (AGGREGATORS, BYZANTINE_MODES, CHANNELS, COMPRESSORS,
-                        CommConfig, dense_bytes, downlink_config,
-                        payload_bytes)
-from repro.configs.base import get_arch
-from repro.configs.paper_cnn import paper_cnn, paper_resnet
-from repro.core import losses as losses_mod
-from repro.core import mdsl, noniid
-from repro.core.mdsl import MdslConfig
-from repro.core.pso import PsoHyperParams
-from repro.data import partition
-from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
+                        CommConfig)
+from repro.experiments import (ExperimentSpec, default_out, get_scenario,
+                               describe_scenarios, override, run)
+from repro.experiments.runner import (ARTIFACTS, CASES, IMAGE_SPECS,
+                                      _noniid2_groups, make_case_data,
+                                      spec_from_mesh_kwargs,
+                                      spec_from_paper_kwargs)
+from repro.experiments.spec import PARTITION_CASES, PAPER_DATASETS
 
-ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts"
+# legacy alias (pre-registry callers imported the case/spec tables here)
+SPECS = IMAGE_SPECS
 
-def _noniid2_groups(C: int) -> list[tuple[int, float]]:
-    """Fig. 2 fleet (20 @ 0.1, 15 @ 0.5, 10 @ 1.0, 5 @ 10.0), scaled
-    proportionally to C workers (quick-mode benchmarks use C < 50)."""
-    fracs = [(0.4, 0.1), (0.3, 0.5), (0.2, 1.0), (0.1, 10.0)]
-    counts = [max(1, round(f * C)) for f, _ in fracs]
-    counts[0] += C - sum(counts)  # absorb rounding into the largest group
-    return [(c, a) for c, (_, a) in zip(counts, fracs)]
-
-
-CASES = {
-    "iid": lambda key, C, spec, n: partition.iid_partition(
-        key, C, spec, n_local=n),
-    "noniid1": lambda key, C, spec, n: partition.dirichlet_partition(
-        key, C, 0.5, spec, n_local=n),
-    "noniid2": lambda key, C, spec, n: partition.mixed_dirichlet_partition(
-        key, _noniid2_groups(C), spec, n_local=n),
-}
-SPECS = {"mnist_like": MNIST_LIKE, "cifar_like": CIFAR_LIKE}
-
-
-def make_case_data(case: str, dataset: str, num_workers: int, seed: int,
-                   n_local: int = 512):
-    spec = SPECS[dataset]
-    return CASES[case](jax.random.PRNGKey(seed), num_workers, spec,
-                       n_local), spec
+__all__ = ["ARTIFACTS", "CASES", "SPECS", "run_paper_experiment",
+           "run_mesh_training", "make_case_data", "build_spec_from_args",
+           "main", "_noniid2_groups"]
 
 
 def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
@@ -96,91 +58,16 @@ def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
                          n_local: int = 512, log_every: int = 1,
                          comm: Optional[CommConfig] = None,
                          verbose: bool = True) -> dict:
-    """One full training run; returns the metrics record."""
-    comm = (comm or CommConfig()).validate()
-    data, spec = make_case_data(case, dataset, num_workers, seed, n_local)
-    img_model = (paper_cnn(spec, width_mult) if model == "cnn"
-                 else paper_resnet(spec, width_mult))
-    L = spec.num_classes
-
-    loss_fn = lambda p, x, y: losses_mod.cross_entropy_loss(
-        img_model.apply(p, x), y, L)
-    eval_fn = lambda p, x, y: losses_mod.rmse_loss(  # Eq. 3 scoring on D_g
-        img_model.apply(p, x), y, L)
-
-    coeffs = (noniid.EtaCoefficients(*eta_coeffs) if eta_coeffs
-              else (noniid.MNIST_COEFFS if dataset == "mnist_like"
-                    else noniid.CIFAR10_COEFFS))
-    eta = noniid.noniid_degree_from_labels(data.y, data.global_y, L, coeffs)
-
-    cfg = MdslConfig(algorithm=algorithm, tau=tau, local_epochs=local_epochs,
-                     batch_size=batch_size,
-                     hp=PsoHyperParams(learning_rate=lr,
-                                       velocity_clip=velocity_clip),
-                     comm=comm)
-    key = jax.random.PRNGKey(seed + 1)
-    state = mdsl.init_state(key, img_model.init, num_workers, eta)
-    n_params = mdsl.count_params(state.global_params)
-
-    @jax.jit
-    def test_accuracy(params):
-        return losses_mod.accuracy(img_model.apply(params, data.test_x),
-                                   data.test_y)
-
-    record = {"algorithm": algorithm, "case": case, "dataset": dataset,
-              "model": img_model.name, "rounds": rounds,
-              "num_workers": num_workers, "tau": tau, "seed": seed,
-              "n_params": n_params, "eta": np.asarray(eta).tolist(),
-              "comm": comm._asdict(),
-              "payload_bytes_per_worker": payload_bytes(
-                  comm, state.global_params),
-              "dense_bytes_per_worker": dense_bytes(state.global_params),
-              "downlink_bytes_per_worker": payload_bytes(
-                  downlink_config(comm), state.global_params),
-              "acc": [], "global_loss": [], "selected": [], "delivered": [],
-              "uploaded_params": [], "bytes_up": [], "bytes_down": [],
-              "round_time_s": []}
-
-    for t in range(rounds):
-        key, rkey = jax.random.split(key)
-        t0 = time.time()
-        state, metrics = mdsl.mdsl_round(
-            state, data.x, data.y, data.global_x, data.global_y, rkey,
-            loss_fn=loss_fn, eval_fn=eval_fn, cfg=cfg, n_params=n_params)
-        acc = float(test_accuracy(state.global_params))
-        record["acc"].append(acc)
-        record["global_loss"].append(float(metrics.global_loss))
-        record["selected"].append(int(metrics.selected_count))
-        record["delivered"].append(int(metrics.delivered_count))
-        record["uploaded_params"].append(float(metrics.uploaded_params))
-        # exact ints host-side: the in-jit f32 CommRecord drifts > 16 MiB
-        # (adaptive tiers mix payloads per worker, so trust the in-jit
-        # accounting there)
-        record["bytes_up"].append(
-            float(metrics.bytes_up) if comm.adaptive_bits
-            else int(metrics.selected_count)
-            * record["payload_bytes_per_worker"])
-        record["bytes_down"].append(
-            num_workers * record["downlink_bytes_per_worker"])
-        record["round_time_s"].append(round(time.time() - t0, 2))
-        if verbose and (t % log_every == 0 or t == rounds - 1):
-            print(f"[{algorithm}/{case}/{dataset}] round {t + 1}/{rounds} "
-                  f"acc={acc:.3f} loss={float(metrics.global_loss):.4f} "
-                  f"selected={int(metrics.selected_count)}/{num_workers} "
-                  f"up={float(metrics.bytes_up) / 2**20:.2f}MiB",
-                  flush=True)
-    record["final_acc"] = record["acc"][-1]
-    record["best_acc"] = max(record["acc"])
-    record["total_uploaded_params"] = float(sum(record["uploaded_params"]))
-    record["total_bytes_up"] = float(sum(record["bytes_up"]))
-    record["total_bytes_down"] = float(sum(record["bytes_down"]))
-    # adaptive tiers mix payloads per worker: the fleet-mean ratio comes
-    # from the in-jit accounting, matching the bytes_up column
-    record["compression_ratio"] = (
-        float(metrics.compression_ratio) if comm.adaptive_bits
-        else record["dense_bytes_per_worker"]
-        / record["payload_bytes_per_worker"])
-    return record
+    """Deprecated: build an `ExperimentSpec` and call
+    `repro.experiments.run` instead. Kept as a golden-pinned shim —
+    identical metrics record on every legacy call path."""
+    spec = spec_from_paper_kwargs(
+        algorithm=algorithm, case=case, dataset=dataset, rounds=rounds,
+        num_workers=num_workers, model=model, width_mult=width_mult,
+        tau=tau, local_epochs=local_epochs, batch_size=batch_size, lr=lr,
+        velocity_clip=velocity_clip, seed=seed, eta_coeffs=eta_coeffs,
+        n_local=n_local, log_every=log_every, comm=comm)
+    return run(spec, verbose=verbose).record
 
 
 def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
@@ -188,148 +75,135 @@ def run_mesh_training(arch: str, steps: int = 5, reduced: bool = True,
                       num_spatial: int = 2, ckpt_dir: Optional[str] = None,
                       seed: int = 0, comm: Optional[CommConfig] = None,
                       verbose: bool = True) -> dict:
-    """Production path on the active devices: DistSwarm round on a
-    (reduced) assigned arch. On a real TPU mesh the same builder is used
-    with the full config via launch/steps.py; on CPU we exercise the jitted
-    round end-to-end (real allocation, so reduced=True is required)."""
-    from repro.core import swarm_dist
-    from repro.core.swarm_dist import DistSwarmConfig
-    from repro.models.transformer import Transformer
+    """Deprecated: build an `ExperimentSpec` and call
+    `repro.experiments.run` instead (golden-pinned shim)."""
+    spec = spec_from_mesh_kwargs(
+        arch=arch, steps=steps, reduced=reduced, seq_len=seq_len,
+        per_worker_batch=per_worker_batch, num_spatial=num_spatial,
+        ckpt_dir=ckpt_dir, seed=seed, comm=comm)
+    return run(spec, verbose=verbose).record
 
-    cfg = get_arch(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    model = Transformer(cfg)
-    dcfg = DistSwarmConfig(worker_axes=(), num_spatial=num_spatial,
-                           local_steps=1, tau=0.9,
-                           hp=PsoHyperParams(learning_rate=3e-3,
-                                             velocity_clip=1.0),
-                           comm=(comm or CommConfig()).validate())
-    key = jax.random.PRNGKey(seed)
-    params = model.init(key)
-    state = swarm_dist.init_state(params, dcfg)
-    step_fn = jax.jit(swarm_dist.build_train_step(model.loss, dcfg))
 
-    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
-    W, B, S = num_spatial, per_worker_batch, seq_len
+# (flag attribute, dotted spec path) — None-defaulted flags are applied
+# only when the user passed them, so scenario presets keep their values
+_COMMON_FLAGS = [
+    ("algorithm", "algo.algorithm"), ("workers", "data.num_workers"),
+    ("seed", "run.seed"), ("tau", "algo.tau"), ("out", "run.out"),
+    ("compressor", "comm.compressor"), ("topk_ratio", "comm.topk_ratio"),
+    ("channel", "comm.channel"), ("drop_prob", "comm.drop_prob"),
+    ("snr_db", "comm.snr_db"), ("byzantine", "comm.byzantine"),
+    ("byzantine_mode", "comm.byzantine_mode"),
+    ("byzantine_scale", "comm.byzantine_scale"),
+    ("aggregator", "comm.aggregator"), ("trim_ratio", "comm.trim_ratio"),
+    ("downlink_compressor", "comm.downlink_compressor"),
+]
+_PAPER_FLAGS = [
+    ("case", "data.case"), ("dataset", "data.dataset"),
+    ("rounds", "run.rounds"), ("model", "model.name"),
+    ("width_mult", "model.width_mult"),
+]
+_MESH_FLAGS = [
+    ("arch", "model.name"), ("steps", "run.rounds"),
+    ("ckpt_dir", "run.ckpt_dir"),
+]
 
-    def batch_for(k, lead):
-        toks = jax.random.randint(k, lead + (B, S), 0, cfg.vocab_size)
-        out = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
-        if cfg.input_mode == "tokens+prefix":
-            out["prefix"] = jnp.zeros(lead + (B, cfg.prefix_len, cfg.d_model),
-                                      jnp.dtype(cfg.dtype))
-        if cfg.encoder_layers:
-            out["frames"] = jax.random.normal(
-                k, lead + (B, cfg.encoder_memory_len, cfg.d_model),
-                jnp.dtype(cfg.dtype))
-        return out
 
-    payload = payload_bytes(dcfg.comm, params)
-    down_payload = payload_bytes(downlink_config(dcfg.comm), params)
-    record = {"arch": arch, "reduced": reduced, "steps": steps,
-              "comm": dcfg.comm._asdict(),
-              "payload_bytes_per_worker": payload,
-              "downlink_bytes_per_worker": down_payload, "global_loss": [],
-              "worker_losses": [], "selected": [], "delivered": [],
-              "bytes_up": [], "bytes_down": [], "step_time_s": []}
-    for i in range(steps):
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        t0 = time.time()
-        state, info = step_fn(state, batch_for(k1, (W,)), batch_for(k2, ()),
-                              k3)
-        gl = float(info.global_loss)
-        record["global_loss"].append(gl)
-        record["worker_losses"].append(np.asarray(info.losses).tolist())
-        record["selected"].append(float(info.mask.sum()))
-        record["delivered"].append(float(info.delivered))
-        # exact ints host-side (the in-jit f32 drifts above 16 MiB)
-        record["bytes_up"].append(
-            float(info.bytes_up) if dcfg.comm.adaptive_bits
-            else int(info.mask.sum()) * payload)
-        record["bytes_down"].append(W * down_payload)
-        record["step_time_s"].append(round(time.time() - t0, 2))
-        if verbose:
-            print(f"[mesh/{arch}] step {i + 1}/{steps} global_loss={gl:.4f} "
-                  f"selected={int(info.mask.sum())}/{W}", flush=True)
-        if mgr is not None:
-            mgr.save(i, state.global_params, metadata={"arch": arch})
-    if mgr is not None:
-        record["ckpt_steps"] = mgr.all_steps()
-    return record
+def build_spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
+    """scenario preset (or mode default) -> legacy flags -> --set."""
+    if args.scenario:
+        spec = get_scenario(args.scenario)
+    elif args.mode == "mesh":
+        spec = spec_from_mesh_kwargs(arch=args.arch or "smollm-360m")
+    else:
+        spec = ExperimentSpec()
+    paper = spec.model.kind == "paper"
+    # fail fast on explicitly-passed flags the spec kind cannot honor
+    # (silently dropping --rounds on a mesh scenario fakes a longer run)
+    wrong_kind = [attr for attr, _ in (_MESH_FLAGS if paper
+                                       else _PAPER_FLAGS)
+                  if getattr(args, attr) is not None]
+    if wrong_kind:
+        names = ", ".join("--" + a.replace("_", "-") for a in wrong_kind)
+        raise ValueError(
+            f"{names} does not apply to a {spec.model.kind!r} spec "
+            f"({'use --steps/--arch' if not paper else 'use --rounds'} "
+            f"or a --set override instead)")
+    for attr, path in _COMMON_FLAGS + (_PAPER_FLAGS if paper
+                                       else _MESH_FLAGS):
+        v = getattr(args, attr)
+        if v is not None:
+            spec = override(spec, f"{path}={v}")
+    if args.no_error_feedback:
+        spec = override(spec, "comm.error_feedback=false")
+    if args.adaptive_bits:
+        spec = override(spec, "comm.adaptive_bits=true")
+    for assignment in args.overrides:
+        spec = override(spec, assignment)
+    return spec.validate()
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="paper", choices=["paper", "mesh"])
+    ap = argparse.ArgumentParser(
+        description="Run one experiment: --scenario NAME [--set k=v ...], "
+                    "or the legacy per-axis flags.")
+    ap.add_argument("--scenario", default=None,
+                    help="named preset from repro.experiments.registry")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="dotted spec override, e.g. comm.compressor=topk "
+                         "(repeatable)")
+    ap.add_argument("--list-scenarios", action="store_true")
+    ap.add_argument("--mode", default="paper", choices=["paper", "mesh"],
+                    help="default spec kind when no --scenario is given")
     # paper mode
-    ap.add_argument("--algorithm", default="mdsl",
+    ap.add_argument("--algorithm", default=None,
                     choices=["fedavg", "dsl", "multi_dsl", "mdsl"])
-    ap.add_argument("--case", default="noniid1", choices=list(CASES))
-    ap.add_argument("--dataset", default="mnist_like", choices=list(SPECS))
-    ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--workers", type=int, default=50)
-    ap.add_argument("--model", default="cnn", choices=["cnn", "resnet"])
-    ap.add_argument("--width-mult", type=int, default=8)
-    ap.add_argument("--tau", type=float, default=0.9)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--case", default=None, choices=list(PARTITION_CASES))
+    ap.add_argument("--dataset", default=None, choices=list(PAPER_DATASETS))
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--model", default=None, choices=["cnn", "resnet"])
+    ap.add_argument("--width-mult", type=int, default=None)
+    ap.add_argument("--tau", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--out", default=None)
     # comm (both modes)
-    ap.add_argument("--compressor", default="identity",
-                    choices=list(COMPRESSORS))
-    ap.add_argument("--topk-ratio", type=float, default=0.05)
+    ap.add_argument("--compressor", default=None, choices=list(COMPRESSORS))
+    ap.add_argument("--topk-ratio", type=float, default=None)
     ap.add_argument("--no-error-feedback", action="store_true")
-    ap.add_argument("--channel", default="ideal", choices=list(CHANNELS))
-    ap.add_argument("--drop-prob", type=float, default=0.1)
-    ap.add_argument("--snr-db", type=float, default=20.0)
-    ap.add_argument("--byzantine", type=int, default=0)
-    ap.add_argument("--byzantine-mode", default="sign_flip",
+    ap.add_argument("--channel", default=None, choices=list(CHANNELS))
+    ap.add_argument("--drop-prob", type=float, default=None)
+    ap.add_argument("--snr-db", type=float, default=None)
+    ap.add_argument("--byzantine", type=int, default=None)
+    ap.add_argument("--byzantine-mode", default=None,
                     choices=list(BYZANTINE_MODES))
-    ap.add_argument("--byzantine-scale", type=float, default=1.0)
-    ap.add_argument("--aggregator", default="mean",
-                    choices=list(AGGREGATORS))
-    ap.add_argument("--trim-ratio", type=float, default=0.1)
-    ap.add_argument("--downlink-compressor", default="identity",
+    ap.add_argument("--byzantine-scale", type=float, default=None)
+    ap.add_argument("--aggregator", default=None, choices=list(AGGREGATORS))
+    ap.add_argument("--trim-ratio", type=float, default=None)
+    ap.add_argument("--downlink-compressor", default=None,
                     choices=list(COMPRESSORS))
     ap.add_argument("--adaptive-bits", action="store_true")
     # mesh mode
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
-    comm = CommConfig(
-        compressor=args.compressor, topk_ratio=args.topk_ratio,
-        error_feedback=not args.no_error_feedback, channel=args.channel,
-        drop_prob=args.drop_prob, snr_db=args.snr_db,
-        byzantine=args.byzantine, byzantine_mode=args.byzantine_mode,
-        byzantine_scale=args.byzantine_scale, aggregator=args.aggregator,
-        trim_ratio=args.trim_ratio,
-        downlink_compressor=args.downlink_compressor,
-        adaptive_bits=args.adaptive_bits)
+    if args.list_scenarios:
+        width = max(len(n) for n, _ in describe_scenarios())
+        for name, what in describe_scenarios():
+            print(f"{name.ljust(width)}  {what}")
+        return
+
     try:
         # fail fast at the CLI, not deep inside the first jitted round
-        comm.validate()
+        spec = build_spec_from_args(args)
     except ValueError as e:
         ap.error(str(e))
 
-    if args.mode == "paper":
-        rec = run_paper_experiment(
-            algorithm=args.algorithm, case=args.case, dataset=args.dataset,
-            rounds=args.rounds, num_workers=args.workers, model=args.model,
-            width_mult=args.width_mult, tau=args.tau, seed=args.seed,
-            comm=comm)
-        out = args.out or (ARTIFACTS / "train" /
-                           f"{args.algorithm}__{args.case}__{args.dataset}"
-                           f"__s{args.seed}.json")
-    else:
-        rec = run_mesh_training(args.arch, steps=args.steps,
-                                ckpt_dir=args.ckpt_dir, seed=args.seed,
-                                comm=comm)
-        out = args.out or (ARTIFACTS / "train" / f"mesh__{args.arch}.json")
-    out = Path(out)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(rec, indent=1))
+    result = run(spec)
+    out = default_out(spec)
+    result.save(out)
     print(f"wrote {out}")
 
 
