@@ -41,6 +41,8 @@ DEFAULT_SCENARIOS = [
     "lossy-uplink-erasure",
     "byzantine-median",
     "adaptive-tiers",
+    "rayleigh-uplink",
+    "snr-tiered-bits",
 ]
 
 

@@ -33,6 +33,26 @@ SWEEP = [
     ("int4", ("comm.compressor=int4",)),
 ]
 
+# accuracy-vs-energy axis (comm.phy): Rayleigh uplinks at 10 dB mean
+# SNR, with/without SNR outage, and the channel-aware N=3 bit tiers
+# ranked by instantaneous SNR (good channels earn more bits) — vs the
+# same tiers ranked by the Eq.-5 score, blind to the channel.
+_RAYLEIGH = ("comm.channel=awgn", "comm.snr_db=10.0",
+             "comm.fading=rayleigh", "comm.doppler_rho=0.9")
+PHY_SWEEP = [
+    ("ideal", ()),
+    ("rayleigh", _RAYLEIGH),
+    ("rayleigh+outage", _RAYLEIGH + ("comm.channel=composite",
+                                     "comm.drop_prob=0.05",
+                                     "comm.outage_snr_db=0.0")),
+    ("snr-tiers(3)", _RAYLEIGH + ("comm.adaptive_bits=true",
+                                  "comm.num_tiers=3",
+                                  "comm.tier_rank=snr")),
+    ("score-tiers(3)", _RAYLEIGH + ("comm.adaptive_bits=true",
+                                    "comm.num_tiers=3",
+                                    "comm.tier_rank=score")),
+]
+
 QUICK = ("run.rounds=8", "model.width_mult=2", "data.num_workers=10",
          "data.n_local=256", "algo.hp.learning_rate=0.05")
 
@@ -117,14 +137,45 @@ def byzantine_sweep(spec: ExperimentSpec, byzantine: int) -> dict:
     return out
 
 
+def phy_sweep(spec: ExperimentSpec) -> dict:
+    """Accuracy-vs-energy over the physical-layer regimes: every run
+    reports its SNR->rate airtime and transmit energy (comm.phy), so
+    the table prices accuracy per joule — including the channel-aware
+    N=3 SNR-ranked bit tiers against their channel-blind score-ranked
+    twin."""
+    out = {}
+    rows = []
+    for name, ovr in PHY_SWEEP:
+        r = _run_one(spec, "algo.algorithm=mdsl", *ovr)
+        out[name] = {
+            "final_acc": r["final_acc"], "best_acc": r["best_acc"],
+            "acc": r["acc"], "total_bytes": r["total_bytes"],
+            "total_airtime_s": r["total_airtime_s"],
+            "total_energy_j": r["total_energy_j"],
+            "mean_snr_db": r["mean_snr_db"], "delivered": r["delivered"]}
+        eff = r["final_acc"] / max(r["total_energy_j"], 1e-12)
+        rows.append([name, f"{r['final_acc']:.3f}",
+                     f"{r['total_bytes'] / 2**20:.2f}MiB",
+                     f"{r['total_airtime_s']:.3f}s",
+                     f"{r['total_energy_j']:.3f}J",
+                     f"{eff:.2f}"])
+    print_table(["phy regime", "final_acc", "total bytes", "airtime",
+                 "energy", "acc/J"], rows,
+                "accuracy vs energy (Rayleigh uplink, SNR->rate airtime)")
+    return out
+
+
 def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
         algorithms: tuple[str, ...] = ("fedavg", "mdsl"),
         aggregator: str = "mean", downlink_compressor: str = "identity",
-        adaptive_bits: bool = False, byzantine: int = 2) -> dict:
+        adaptive_bits: bool = False, byzantine: int = 2,
+        rounds_override: int | None = None, phy: bool = True) -> dict:
     base = base_spec(quick=quick, dataset=dataset, seed=seed,
                      aggregator=aggregator,
                      downlink_compressor=downlink_compressor,
                      adaptive_bits=adaptive_bits)
+    if rounds_override is not None:
+        base = override(base, f"run.rounds={rounds_override}")
     rounds, workers = base.run.rounds, base.data.num_workers
     recs = {}
     for algo in algorithms:
@@ -207,6 +258,8 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
                "selected": r["selected"],
                "delivered": r["delivered"],
            } for (a, c), r in recs.items()}})
+    if phy:
+        rec["phy_sweep"] = phy_sweep(base)
     if byzantine > 0:
         rec["byzantine_sweep"] = byzantine_sweep(base, byzantine)
     save_record("comm_efficiency", rec)
@@ -217,6 +270,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep (C=50, 20 rounds)")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick mode (default unless --full): "
+                         "C=10 reduced-width fleet")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override the round count (CI smoke runs)")
     ap.add_argument("--dataset", default="mnist_like")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--aggregator", default="mean",
@@ -226,11 +284,17 @@ def main() -> None:
     ap.add_argument("--adaptive-bits", action="store_true")
     ap.add_argument("--byzantine", type=int, default=2,
                     help="attackers in the robustness sweep (0 disables)")
+    ap.add_argument("--no-phy", action="store_true",
+                    help="skip the accuracy-vs-energy phy sweep "
+                         "(5 extra runs over the Rayleigh regimes)")
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     run(quick=not args.full, dataset=args.dataset, seed=args.seed,
         aggregator=args.aggregator,
         downlink_compressor=args.downlink_compressor,
-        adaptive_bits=args.adaptive_bits, byzantine=args.byzantine)
+        adaptive_bits=args.adaptive_bits, byzantine=args.byzantine,
+        rounds_override=args.rounds, phy=not args.no_phy)
 
 
 if __name__ == "__main__":

@@ -8,32 +8,42 @@ comm/accuracy trade-off is an experiment axis:
   compress.py  pytree compressors (identity / top-k / int8 / int4 via
                the kernels/quant_pack fused kernel) with per-worker
                error-feedback residuals carried in the swarm state
-  channel.py   uplink models (ideal / packet erasure / AWGN analog
-               aggregation) + Byzantine worker attacks
-  budget.py    CommConfig + per-round CommRecord in bytes on the wire
+  phy.py       per-worker physical layer: PhyState (Rayleigh block
+               fading, pathloss, instantaneous SNR, delivery age),
+               LinkModel (delivery x distortion decomposition of the
+               channel enum), SNR-outage delivery
+  channel.py   the Aggregate stage over the phy link (masked mean /
+               robust Eq.-7 variants) + Byzantine worker attacks
+  budget.py    CommConfig + per-round CommRecord: bytes on the wire,
+               and SNR->rate airtime / transmit energy (rate_bps)
 
-Both engines (`core/mdsl.py`, `core/swarm_dist.py`) thread a
-`CommConfig` through their round functions; `launch/train.py` exposes
-the flags and `benchmarks/comm_efficiency.py` sweeps the trade-off.
+Both engines (`core/mdsl.py`, `core/swarm_dist.py`) carry the PhyState
+in their train states and thread a `CommConfig` through their round
+functions; `launch/train.py` exposes the flags and
+`benchmarks/comm_efficiency.py` sweeps the trade-offs (bytes, energy,
+airtime).
 """
 from repro.comm.budget import (AGGREGATORS, BYZANTINE_MODES, CHANNELS,
-                               COMPRESSORS, CommConfig, CommRecord,
+                               COMPRESSORS, FADING_MODELS, RATE_MODELS,
+                               TIER_RANKS, CommConfig, CommRecord,
                                degrade, dense_bytes, downlink_config,
                                host_round_bytes, leaf_payload_bytes,
-                               payload_bytes, round_record, topk_count,
-                               uplink_tiers)
+                               payload_bytes, rate_bps, round_record,
+                               topk_count, uplink_tiers)
 from repro.comm.channel import (corrupt_local_updates, erasure_mask,
                                 receive)
 # NOTE: the compress *function* is deliberately not re-exported — it
 # would shadow the `repro.comm.compress` submodule attribute.
 from repro.comm.compress import (compress_with_ef, init_residual,
                                  select_residual)
+from repro.comm.phy import LinkModel, PhyState, delivery_mask, link_model
 
 __all__ = ["AGGREGATORS", "BYZANTINE_MODES", "CHANNELS", "COMPRESSORS",
-           "CommConfig", "CommRecord", "compress_with_ef",
-           "corrupt_local_updates", "degrade", "dense_bytes",
-           "downlink_config", "erasure_mask", "host_round_bytes",
-           "init_residual",
-           "leaf_payload_bytes", "payload_bytes", "receive",
+           "CommConfig", "CommRecord", "FADING_MODELS", "LinkModel",
+           "PhyState", "RATE_MODELS", "TIER_RANKS", "compress_with_ef",
+           "corrupt_local_updates", "degrade", "delivery_mask",
+           "dense_bytes", "downlink_config", "erasure_mask",
+           "host_round_bytes", "init_residual", "leaf_payload_bytes",
+           "link_model", "payload_bytes", "rate_bps", "receive",
            "round_record", "select_residual", "topk_count",
            "uplink_tiers"]

@@ -21,7 +21,7 @@ Conventions (documented here, relied on by tests and benchmarks):
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,9 +38,15 @@ SCALE_BYTES = 4   # one fp32 scale per quantization block
 QUANT_BLOCK_ELEMS = 256 * 128
 
 COMPRESSORS = ("identity", "topk", "int8", "int4")
-CHANNELS = ("ideal", "erasure", "awgn")
+# "composite" = packet erasure AND AWGN in one round — the delivery and
+# distortion axes of comm.phy.LinkModel applied together (the legacy
+# enum could only express one at a time)
+CHANNELS = ("ideal", "erasure", "awgn", "composite")
 BYZANTINE_MODES = ("sign_flip", "gaussian")
 AGGREGATORS = ("mean", "median", "trimmed_mean")
+FADING_MODELS = ("none", "rayleigh")
+RATE_MODELS = ("shannon",)
+TIER_RANKS = ("score", "snr")
 
 
 class CommConfig(NamedTuple):
@@ -58,7 +64,19 @@ class CommConfig(NamedTuple):
     aggregator: str = "mean"            # see AGGREGATORS (Eq. 7 variants)
     trim_ratio: float = 0.1             # trimmed_mean: fraction cut per side
     downlink_compressor: str = "identity"  # PS broadcast compression
-    adaptive_bits: bool = False         # per-worker wire tier from Eq.-5 rank
+    adaptive_bits: bool = False         # per-worker wire tiers (rank-based)
+    # -- physical layer (comm.phy) --------------------------------------
+    fading: str = "none"                # see FADING_MODELS
+    doppler_rho: float = 0.95           # Gauss-Markov round correlation
+    pathloss_spread_db: float = 0.0     # static per-worker pathloss spread
+    outage_snr_db: Optional[float] = None  # delivery: SNR outage cut (None off)
+    rate_model: str = "shannon"         # see RATE_MODELS (SNR -> rate)
+    bandwidth_hz: float = 1e6           # uplink bandwidth per worker
+    tx_power_w: float = 0.1             # transmit power (energy accounting)
+    coding_gap_db: float = 3.0          # practical-coding gap to capacity
+    # -- adaptive tiers (widened: N tiers, score- or SNR-ranked) --------
+    num_tiers: int = 2                  # adaptive_bits: wire tier count
+    tier_rank: str = "score"            # see TIER_RANKS (Eq.-5 | inst. SNR)
 
     def validate(self) -> "CommConfig":
         if self.compressor not in COMPRESSORS:
@@ -82,6 +100,42 @@ class CommConfig(NamedTuple):
         if not 0.0 <= self.trim_ratio < 0.5:
             raise ValueError(f"trim_ratio must be in [0, 0.5), got "
                              f"{self.trim_ratio}")
+        if self.fading not in FADING_MODELS:
+            raise ValueError(f"unknown fading model {self.fading!r}")
+        if self.rate_model not in RATE_MODELS:
+            raise ValueError(f"unknown rate model {self.rate_model!r}")
+        if self.tier_rank not in TIER_RANKS:
+            raise ValueError(f"unknown tier rank {self.tier_rank!r}")
+        if not 0.0 <= self.doppler_rho <= 1.0:
+            raise ValueError(f"doppler_rho must be in [0, 1], got "
+                             f"{self.doppler_rho}")
+        if self.pathloss_spread_db < 0.0:
+            raise ValueError(f"pathloss_spread_db must be >= 0, got "
+                             f"{self.pathloss_spread_db}")
+        if self.bandwidth_hz <= 0.0:
+            raise ValueError(f"bandwidth_hz must be > 0, got "
+                             f"{self.bandwidth_hz}")
+        if self.tx_power_w <= 0.0:
+            raise ValueError(f"tx_power_w must be > 0, got "
+                             f"{self.tx_power_w}")
+        if self.coding_gap_db < 0.0:
+            raise ValueError(f"coding_gap_db must be >= 0, got "
+                             f"{self.coding_gap_db}")
+        if self.num_tiers < 2:
+            raise ValueError(f"num_tiers must be >= 2, got {self.num_tiers}")
+        if (self.tier_rank == "snr" and self.fading == "none"
+                and self.pathloss_spread_db == 0.0):
+            raise ValueError(
+                "tier_rank='snr' needs per-worker SNRs: enable "
+                "fading='rayleigh' or a pathloss_spread_db > 0 — with a "
+                "uniform SNR the ranking is arbitrary")
+        if (self.outage_snr_db is not None and self.fading == "none"
+                and self.pathloss_spread_db == 0.0):
+            raise ValueError(
+                "outage_snr_db needs per-worker SNR dynamics "
+                "(fading='rayleigh' or pathloss_spread_db > 0) — with "
+                "one static fleet-wide SNR the outage is a degenerate "
+                "all-or-nothing blackout")
         return self
 
 
@@ -97,6 +151,9 @@ class CommRecord(NamedTuple):
     bytes_down: Array          # broadcast: C x downlink payload
     delivered: Array           # uploads surviving the channel
     compression_ratio: Array   # uncompressed payload / mean uplink payload
+    airtime_s: Array           # uplink airtime: sum_i s_i bits_i / rate_i
+    energy_j: Array            # transmit energy: tx_power_w * airtime
+    mean_snr_db: Array         # fleet-mean instantaneous received SNR
 
 
 def topk_count(n: int, ratio: float) -> int:
@@ -159,13 +216,31 @@ def degrade(cfg: CommConfig) -> CommConfig:
 
 
 def uplink_tiers(cfg: CommConfig) -> tuple[CommConfig, ...]:
-    """Per-worker CommConfig resolution (adaptive bit allocation): the
-    base config plus, when `adaptive_bits` is set, the degraded tier the
-    PS assigns to workers ranked in the worse Eq.-5 half."""
+    """Per-worker CommConfig resolution (adaptive bit allocation): with
+    `adaptive_bits` set, the degradation chain of up to `num_tiers`
+    configs the PS assigns down the worker ranking (Eq.-5 score or
+    instantaneous SNR, `tier_rank`); the chain stops early at the int4
+    floor. Tier 0 is the base config (best-ranked workers)."""
     if not cfg.adaptive_bits:
         return (cfg,)
-    low = degrade(cfg)
-    return (cfg,) if low == cfg else (cfg, low)
+    tiers = [cfg]
+    while len(tiers) < cfg.num_tiers:
+        nxt = degrade(tiers[-1])
+        if nxt == tiers[-1]:
+            break
+        tiers.append(nxt)
+    return tuple(tiers)
+
+
+def rate_bps(cfg: CommConfig, snr_db: Array) -> Array:
+    """SNR -> achievable uplink rate (bits/s): Shannon capacity backed
+    off by a practical-coding gap,
+
+        R = B log2(1 + 10^((snr_db - gap_db) / 10)).
+
+    This is what converts payload bytes into airtime and energy."""
+    eff_snr = 10.0 ** ((snr_db - cfg.coding_gap_db) / 10.0)
+    return cfg.bandwidth_hz * jnp.log2(1.0 + eff_snr)
 
 
 def host_round_bytes(cfg: CommConfig, *, selected, bytes_up_jit,
@@ -185,30 +260,44 @@ def host_round_bytes(cfg: CommConfig, *, selected, bytes_up_jit,
 
 
 def round_record(cfg: CommConfig, params: PyTree, num_workers: int,
-                 mask: Array, mask_eff: Array,
-                 tier_lo: Array = None) -> CommRecord:
+                 mask: Array, mask_eff: Array, tier_idx: Array = None,
+                 snr_db: Array = None) -> CommRecord:
     """Wire accounting for one round: `mask` is the Eq.-6 selection,
-    `mask_eff` the post-channel survivor mask, `tier_lo` the (C,)
-    indicator of workers on the degraded adaptive tier (None when the
-    fleet shares one wire config)."""
+    `mask_eff` the post-channel survivor mask, `tier_idx` the (C,)
+    per-worker wire-tier index into `uplink_tiers(cfg)` (None when the
+    fleet shares one wire config), `snr_db` the (C,) instantaneous
+    received SNRs from the PhyState (None = the shared link budget
+    `cfg.snr_db` — airtime/energy still price out, just uniformly)."""
     tiers = uplink_tiers(cfg)
     dense = dense_bytes(params)
-    p_hi = payload_bytes(tiers[0], params)
-    if tier_lo is None or len(tiers) == 1:
-        bytes_up = mask.sum() * p_hi
-        mean_payload = p_hi
+    payloads = [payload_bytes(t, params) for t in tiers]
+    if tier_idx is None or len(tiers) == 1:
+        bytes_up = mask.sum() * payloads[0]
+        mean_payload = payloads[0]
+        worker_bytes = jnp.full(mask.shape, payloads[0], jnp.float32)
     else:
-        p_lo = payload_bytes(tiers[1], params)
-        bytes_up = ((mask * (1.0 - tier_lo)).sum() * p_hi
-                    + (mask * tier_lo).sum() * p_lo)
-        n_lo = tier_lo.sum()         # degraded-tier count, per the actual
-        #                              assignment (rounds.tier_masks)
-        mean_payload = (p_hi * (num_workers - n_lo) + p_lo * n_lo
-                        ) / num_workers
+        on_tier = [(tier_idx == t).astype(jnp.float32)
+                   for t in range(len(tiers))]
+        bytes_up = sum((mask * on_t).sum() * p
+                       for on_t, p in zip(on_tier, payloads))
+        mean_payload = sum(p * on_t.sum()
+                           for on_t, p in zip(on_tier, payloads)
+                           ) / num_workers
+        worker_bytes = sum(on_t * p for on_t, p in zip(on_tier, payloads))
     bytes_down = num_workers * payload_bytes(downlink_config(cfg), params)
+    # SNR -> rate -> airtime/energy: every transmitting (selected) worker
+    # occupies the channel for bits/rate seconds, lost packets included —
+    # a drop wastes the airtime it consumed (same convention as bytes_up)
+    snr = (snr_db if snr_db is not None
+           else jnp.full(mask.shape, cfg.snr_db, jnp.float32))
+    per_worker_airtime = 8.0 * worker_bytes / rate_bps(cfg, snr)
+    airtime = (mask * per_worker_airtime).sum()
     return CommRecord(
         bytes_up=bytes_up,
         bytes_down=jnp.asarray(bytes_down, jnp.float32),
         delivered=mask_eff.sum(),
         compression_ratio=jnp.asarray(dense / mean_payload, jnp.float32),
+        airtime_s=airtime.astype(jnp.float32),
+        energy_j=(cfg.tx_power_w * airtime).astype(jnp.float32),
+        mean_snr_db=snr.mean().astype(jnp.float32),
     )

@@ -1,15 +1,27 @@
-"""Uplink channel models for the selected workers' uploads.
+"""Uplink channel + Eq.-7 Aggregate stage, as a thin layer over the
+per-worker physical layer in `comm/phy.py`.
 
-  ideal     lossless digital uplink (the seed repo's implicit model)
-  erasure   each selected upload is lost i.i.d. with `drop_prob`
-            (packet erasure / straggler timeout). A lost upload falls
-            out of Eq. 7's masked mean — the denominator shrinks to the
-            survivors and an all-lost round leaves w_t unchanged —
-            rather than entering as a zero delta that drags the mean.
-  awgn      over-the-air analog aggregation (arXiv:2510.18152): the PS
-            receives the superposed sum of the selected deltas plus
-            AWGN at `snr_db` relative to the superposed signal power,
-            then normalizes by |S|.
+The legacy enum configs are degenerate `phy.LinkModel` resolutions of
+one composable path (delivery x distortion; see phy.link_model):
+
+  ideal      lossless digital uplink (no delivery loss, no distortion)
+  erasure    delivery: each selected upload lost i.i.d. with `drop_prob`
+             (packet erasure / straggler timeout). A lost upload falls
+             out of Eq. 7's masked mean — the denominator shrinks to the
+             survivors and an all-lost round leaves w_t unchanged.
+  awgn       distortion: AWGN at `snr_db`. With a fleet-shared SNR this
+             is over-the-air analog aggregation (arXiv:2510.18152) —
+             noise on the superposed sum before the 1/|S| normalization.
+             With per-worker SNRs (Rayleigh fading / pathloss spread,
+             `comm.phy`) it is per-upload digital decode noise at each
+             worker's OWN instantaneous SNR.
+  composite  delivery AND distortion in one round — drop_prob and
+             snr_db both apply (the enum could not compose them).
+
+An `outage_snr_db` threshold adds SNR-outage delivery loss on top of
+any of these (a worker faded below the threshold cannot close the
+link), and `fading="rayleigh"` evolves the per-worker channel state
+round to round (`rounds.wire_round` threads the PhyState).
 
 Byzantine workers (CB-DSL, arXiv:2208.05578) are modeled as faulty
 nodes: the *last* `byzantine` of the C workers compute adversarial
@@ -20,11 +32,12 @@ CB-DSL robustness mechanism — while FedAvg averages them in every round.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.comm import phy as comm_phy
 from repro.comm.budget import CommConfig
 
 Array = jax.Array
@@ -55,60 +68,71 @@ def corrupt_local_updates(cfg: CommConfig, prev_params: PyTree,
     return jax.tree.unflatten(treedef, out)
 
 
-def erasure_mask(cfg: CommConfig, mask: Array, key: Array) -> Array:
-    """Post-channel survivor mask: which selected uploads arrived."""
-    if cfg.channel != "erasure":
-        return mask
-    keep = jax.random.bernoulli(key, 1.0 - cfg.drop_prob, mask.shape)
-    return mask * keep.astype(mask.dtype)
+def erasure_mask(cfg: CommConfig, mask: Array, key: Array,
+                 snr_db: Optional[Array] = None) -> Array:
+    """Post-channel survivor mask (compat shim over phy.delivery_mask:
+    packet erasure composed with SNR outage)."""
+    return comm_phy.delivery_mask(cfg, mask, key, snr_db=snr_db)
 
 
 def receive(cfg: CommConfig, global_params: PyTree, wire_deltas: PyTree,
-            mask: Array, key: Array) -> tuple[PyTree, Array]:
+            mask: Array, key: Array, snr_db: Optional[Array] = None
+            ) -> tuple[PyTree, Array]:
     """Uplink channel + Eq.-7 Aggregate stage: push the selected
-    workers' wire deltas through the channel and fold the aggregate
-    (cfg.aggregator: masked mean, coordinate-wise median, or trimmed
-    mean) into the global model.
+    workers' wire deltas through the link (delivery then distortion,
+    phy.LinkModel) and fold the aggregate (cfg.aggregator: masked mean,
+    coordinate-wise median, or trimmed mean) into the global model.
 
     wire_deltas: pytree with leading worker dim C (decoded payloads from
-    `compress`); mask: (C,) Eq.-6 selection. Returns (w_{t+1}, mask_eff)
-    where mask_eff marks the uploads that actually arrived.
+    `compress`); mask: (C,) Eq.-6 selection; snr_db: (C,) instantaneous
+    received SNRs from the PhyState (None = fleet-shared cfg.snr_db).
+    Returns (w_{t+1}, mask_eff) where mask_eff marks the uploads that
+    actually arrived.
     """
+    link = comm_phy.link_model(cfg)
     ekey, nkey = jax.random.split(key)
-    mask_eff = erasure_mask(cfg, mask, ekey)
+    mask_eff = comm_phy.delivery_mask(cfg, mask, ekey, snr_db=snr_db)
     if cfg.aggregator != "mean":
-        return _robust_receive(cfg, global_params, wire_deltas, mask_eff,
-                               nkey), mask_eff
+        return _robust_receive(cfg, link, global_params, wire_deltas,
+                               mask_eff, nkey, snr_db), mask_eff
     denom = jnp.maximum(mask_eff.sum(), 1.0)
 
     g_leaves, treedef = jax.tree.flatten(global_params)
     d_leaves = jax.tree.leaves(wire_deltas)
     out = []
     for i, (g, d) in enumerate(zip(g_leaves, d_leaves)):
+        d = d.astype(jnp.float32)
         m = mask_eff.reshape((-1,) + (1,) * (d.ndim - 1))
-        s = (m * d.astype(jnp.float32)).sum(axis=0)
-        if cfg.channel == "awgn":
+        if link.awgn and link.per_worker and snr_db is not None:
+            # per-upload digital decode noise at each worker's own SNR
+            sigma = comm_phy.noise_sigma_per_worker(d, snr_db)
+            d = d + sigma * jax.random.normal(jax.random.fold_in(nkey, i),
+                                              d.shape, jnp.float32)
+        s = (m * d).sum(axis=0)
+        if link.awgn and not (link.per_worker and snr_db is not None):
             # AWGN on the superposed analog signal, before the 1/|S|
             # normalization; sigma from the per-round signal power.
-            sig_rms = jnp.sqrt(jnp.mean(s * s))
-            sigma = sig_rms * (10.0 ** (-cfg.snr_db / 20.0))
+            sigma = comm_phy.noise_sigma_superposed(cfg, s)
             s = s + sigma * jax.random.normal(jax.random.fold_in(nkey, i),
                                               s.shape, jnp.float32)
         out.append((g + s / denom).astype(g.dtype))
     return jax.tree.unflatten(treedef, out), mask_eff
 
 
-def _robust_receive(cfg: CommConfig, global_params: PyTree,
-                    wire_deltas: PyTree, mask_eff: Array,
-                    nkey: Array) -> PyTree:
+def _robust_receive(cfg: CommConfig, link: comm_phy.LinkModel,
+                    global_params: PyTree, wire_deltas: PyTree,
+                    mask_eff: Array, nkey: Array,
+                    snr_db: Optional[Array]) -> PyTree:
     """Byzantine-robust Eq.-7 variants (CB-DSL, arXiv:2208.05578):
     coordinate-wise median / trimmed mean over the delivered deltas.
 
     Robust statistics need the individual uploads at the PS, so AWGN
     here is per-upload digital decode noise, not the analog
-    superposition of the mean path. Non-delivered workers are masked to
-    +inf and sorted to the top; the traced survivor count k picks the
-    order statistics, so erasure composes with robustness.
+    superposition of the mean path — at each worker's own SNR when the
+    phy differentiates them, at the shared `snr_db` otherwise.
+    Non-delivered workers are masked to +inf and sorted to the top; the
+    traced survivor count k picks the order statistics, so erasure (and
+    SNR outage) composes with robustness.
     """
     k = mask_eff.sum().astype(jnp.int32)
     g_leaves, treedef = jax.tree.flatten(global_params)
@@ -118,10 +142,13 @@ def _robust_receive(cfg: CommConfig, global_params: PyTree,
         C = d.shape[0]
         d = d.astype(jnp.float32)
         m = mask_eff.reshape((-1,) + (1,) * (d.ndim - 1))
-        if cfg.channel == "awgn":
-            n_el = jnp.maximum(mask_eff.sum(), 1.0) * (d.size // C)
-            sig_rms = jnp.sqrt((m * d * d).sum() / n_el)
-            sigma = sig_rms * (10.0 ** (-cfg.snr_db / 20.0))
+        if link.awgn:
+            if link.per_worker and snr_db is not None:
+                sigma = comm_phy.noise_sigma_per_worker(d, snr_db)
+            else:
+                n_el = jnp.maximum(mask_eff.sum(), 1.0) * (d.size // C)
+                sig_rms = jnp.sqrt((m * d * d).sum() / n_el)
+                sigma = sig_rms * (10.0 ** (-cfg.snr_db / 20.0))
             d = d + sigma * jax.random.normal(jax.random.fold_in(nkey, i),
                                               d.shape, jnp.float32)
         svals = jnp.sort(jnp.where(m > 0, d, jnp.inf), axis=0)

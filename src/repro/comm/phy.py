@@ -1,0 +1,195 @@
+"""repro.comm.phy — the per-worker physical layer under the uplink.
+
+The seed channel was one `if cfg.channel == ...` enum with a single
+scalar `snr_db` shared by every worker. This module gives the wire a
+real PHY with per-worker, round-to-round state:
+
+  PhyState     per-worker complex fading gain (h_re/h_im), static
+               pathloss, the instantaneous received SNR derived from
+               them, and an age counter (rounds since the worker's last
+               delivered upload — the seed slot for async/stale-round
+               aggregation).
+  evolve       Rayleigh block fading as a Gauss-Markov process:
+                   h_{t+1} = rho h_t + sqrt(1 - rho^2) CN(0, 1)
+               (`doppler_rho` = round-to-round correlation; rho=1 is a
+               static channel, rho=0 draws i.i.d. per round). Workers
+               start at unit gain, so E|h_t|^2 = 1 for every t — the
+               fading is unbiased from round 0, not just in the
+               stationary limit.
+  LinkModel    the old channel enum decomposed into orthogonal effects:
+                 delivery    packet erasure (drop_prob) AND/OR an SNR
+                             outage threshold (outage_snr_db)
+                 distortion  AWGN at the received SNR — the legacy
+                             analog superposition when the fleet shares
+                             one SNR, per-upload digital decode noise
+                             when SNRs differ per worker
+               so ideal / erasure / awgn / composite are degenerate
+               configurations of ONE path instead of three branches
+               (Byzantine corruption stays in `channel.py`: it happens
+               at the workers, before the wire).
+
+The SNR→achievable-rate model (`budget.rate_bps`: Shannon capacity with
+a practical-coding gap) converts each worker's payload bytes into
+airtime and transmit energy; `budget.round_record` charges them next to
+bytes_up so accuracy-vs-energy is an experiment axis
+(benchmarks/comm_efficiency.py).
+
+Key discipline (golden-pinned): the legacy ideal/erasure/awgn configs
+consume randomness exactly as before — delivery uses the same ekey
+bernoulli, distortion the same per-leaf fold_in(nkey, i) draws, and the
+fading evolution lives on its own fold_in(wkey, PHY_SALT) stream — so
+`fading="none"` runs are bit-identical through this seam.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.budget import CommConfig, rate_bps  # noqa: F401 (re-export)
+
+Array = jax.Array
+
+PHY_SALT = 0xF0   # fading evolution key = fold_in(wkey, PHY_SALT): keeps
+#                   the engines' legacy key-split structure (and goldens)
+#                   unchanged
+
+_GAIN_FLOOR = 1e-12   # |h|^2 floor before the dB conversion (deep fade)
+
+
+class PhyState(NamedTuple):
+    """Per-worker physical-layer state, one slot per worker (leading C).
+
+    A jit/vmap/spmd-safe pytree carried in the engines' train states and
+    threaded through `rounds.wire_round` (sharded over the worker axes
+    on the mesh path, next to losses/eta)."""
+    h_re: Array          # (C,) fading gain, real part
+    h_im: Array          # (C,) fading gain, imag part
+    pathloss_db: Array   # (C,) static per-worker pathloss (>= 0 dB)
+    snr_db: Array        # (C,) instantaneous received SNR this round
+    age: Array           # (C,) int32 rounds since last delivered upload
+
+
+def pathloss_profile(cfg: CommConfig, num_workers: int) -> Array:
+    """Static per-worker pathloss: workers spread evenly over
+    [0, pathloss_spread_db] dB of extra attenuation (worker 0 closest
+    to the PS). Deterministic so specs stay reproducible without a key."""
+    if num_workers == 1:
+        return jnp.zeros((1,), jnp.float32)
+    return jnp.linspace(0.0, cfg.pathloss_spread_db, num_workers,
+                        dtype=jnp.float32)
+
+
+def instantaneous_snr_db(cfg: CommConfig, h_re: Array, h_im: Array,
+                         pathloss_db: Array) -> Array:
+    """Received SNR per worker: the link budget `snr_db` minus pathloss
+    plus the fading gain |h|^2 in dB."""
+    gain2 = jnp.maximum(h_re * h_re + h_im * h_im, _GAIN_FLOOR)
+    return (cfg.snr_db - pathloss_db
+            + 10.0 * jnp.log10(gain2)).astype(jnp.float32)
+
+
+def init_state(cfg: CommConfig, num_workers: int) -> PhyState:
+    """Unit-gain start (|h_0| = 1, zero phase) for every fading model:
+    E|h_t|^2 = rho^{2t} |h_0|^2 + (1 - rho^{2t}) = 1 exactly, so the
+    Gauss-Markov recursion is unbiased from the first round and no init
+    key is needed."""
+    ones = jnp.ones((num_workers,), jnp.float32)
+    zeros = jnp.zeros((num_workers,), jnp.float32)
+    pl = pathloss_profile(cfg, num_workers)
+    return PhyState(h_re=ones, h_im=zeros, pathloss_db=pl,
+                    snr_db=instantaneous_snr_db(cfg, ones, zeros, pl),
+                    age=jnp.zeros((num_workers,), jnp.int32))
+
+
+def evolve(cfg: CommConfig, phy: PhyState, key: Array) -> PhyState:
+    """One round of Rayleigh block fading (Gauss-Markov / Jakes AR-1):
+
+        h_{t+1} = rho h_t + sqrt(1 - rho^2) CN(0, 1)
+
+    each complex component N(0, 1/2) so the innovation has unit power.
+    `fading="none"` is the identity (no randomness consumed)."""
+    if cfg.fading == "none":
+        return phy
+    rho = cfg.doppler_rho
+    innov = jnp.sqrt(max(1.0 - rho * rho, 0.0))
+    kr, ki = jax.random.split(key)
+    C = phy.h_re.shape[0]
+    std = jnp.sqrt(0.5).astype(jnp.float32)
+    h_re = rho * phy.h_re + innov * std * jax.random.normal(
+        kr, (C,), jnp.float32)
+    h_im = rho * phy.h_im + innov * std * jax.random.normal(
+        ki, (C,), jnp.float32)
+    return phy._replace(
+        h_re=h_re, h_im=h_im,
+        snr_db=instantaneous_snr_db(cfg, h_re, h_im, phy.pathloss_db))
+
+
+def advance_age(phy: PhyState, mask_eff: Array) -> PhyState:
+    """Refresh the staleness counter after the Aggregate stage: a
+    delivered upload resets the worker's age, everyone else ages one
+    round (the async/stale-round stage weights by this)."""
+    delivered = mask_eff > 0
+    return phy._replace(age=jnp.where(delivered, 0, phy.age + 1))
+
+
+# ---------------------------------------------------------------------------
+# LinkModel: the channel enum decomposed into orthogonal effects
+# ---------------------------------------------------------------------------
+
+class LinkModel(NamedTuple):
+    """Static resolution of a CommConfig into independent link effects
+    (hashable, closed over by the jitted round)."""
+    drop_prob: float               # delivery: P(packet lost), 0 = lossless
+    awgn: bool                     # distortion: AWGN at the received SNR
+    outage_db: Optional[float]     # delivery: SNR outage threshold (None off)
+    per_worker: bool               # SNRs differ per worker (fading/pathloss)
+
+
+def link_model(cfg: CommConfig) -> LinkModel:
+    """Decompose the legacy enum + the phy axes. "composite" turns on
+    packet loss AND noise together — the combination the enum could
+    never express (delivery and distortion are independent axes)."""
+    return LinkModel(
+        drop_prob=(cfg.drop_prob if cfg.channel in ("erasure", "composite")
+                   else 0.0),
+        awgn=cfg.channel in ("awgn", "composite"),
+        outage_db=cfg.outage_snr_db,
+        per_worker=(cfg.fading != "none" or cfg.pathloss_spread_db > 0.0),
+    )
+
+
+def delivery_mask(cfg: CommConfig, mask: Array, key: Array,
+                  snr_db: Optional[Array] = None) -> Array:
+    """Delivery stage: which selected uploads arrive at the PS. Packet
+    erasure (i.i.d. bernoulli, legacy key discipline) composes with SNR
+    outage (a worker faded below `outage_snr_db` cannot close the link
+    this round — deterministic given the channel state)."""
+    link = link_model(cfg)
+    out = mask
+    if link.drop_prob > 0.0:
+        keep = jax.random.bernoulli(key, 1.0 - link.drop_prob, mask.shape)
+        out = out * keep.astype(mask.dtype)
+    if link.outage_db is not None and snr_db is not None:
+        up = (snr_db >= link.outage_db).astype(mask.dtype)
+        out = out * up
+    return out
+
+
+def noise_sigma_superposed(cfg: CommConfig, s: Array) -> Array:
+    """Legacy analog-aggregation sigma: AWGN on the superposed signal
+    at the shared `snr_db`, relative to the superposed RMS power."""
+    sig_rms = jnp.sqrt(jnp.mean(s * s))
+    return sig_rms * (10.0 ** (-cfg.snr_db / 20.0))
+
+
+def noise_sigma_per_worker(d: Array, snr_db: Array) -> Array:
+    """Per-upload digital decode sigma: each worker's wire leaf is
+    distorted at its OWN instantaneous SNR, relative to its own RMS
+    power. Returns sigma broadcastable against d (leading worker dim)."""
+    C = d.shape[0]
+    axes = tuple(range(1, d.ndim))
+    rms = jnp.sqrt(jnp.mean(d * d, axis=axes) + 1e-20)     # (C,)
+    sigma = rms * (10.0 ** (-snr_db / 20.0))
+    return sigma.reshape((C,) + (1,) * (d.ndim - 1))

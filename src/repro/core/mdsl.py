@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.comm import channel as comm_channel
 from repro.comm import compress as comm_compress
+from repro.comm import phy as comm_phy
 from repro.comm.budget import CommConfig
 from repro.core import pso, rounds, selection
 from repro.core.pso import (GlobalBest, PsoCoefficients, PsoHyperParams,
@@ -77,11 +78,15 @@ class SwarmTrainState(NamedTuple):
     eta: Array                       # (C,) non-iid degrees (static over rounds)
     residual: PyTree                 # (C, ...) uplink error-feedback state
     ps_residual: PyTree              # PS-side downlink error-feedback state
+    phy: comm_phy.PhyState           # per-worker channel state (comm.phy)
 
 
 def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
-               num_workers: int, eta: Array) -> SwarmTrainState:
-    """All workers start from a common global init (Algorithm 1 line 0)."""
+               num_workers: int, eta: Array,
+               comm: CommConfig = CommConfig()) -> SwarmTrainState:
+    """All workers start from a common global init (Algorithm 1 line 0).
+    `comm` seeds the physical-layer state (pathloss profile, unit-gain
+    fading) — pass the run's wire config when it uses phy axes."""
     params = init_params_fn(key)
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (num_workers,) + x.shape), params)
@@ -95,6 +100,7 @@ def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
         eta=eta,
         residual=comm_compress.init_residual(stacked),
         ps_residual=rounds.init_ps_residual(params),
+        phy=comm_phy.init_state(comm, num_workers),
     )
 
 
@@ -221,7 +227,7 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
     out = pipe.wire(delta=delta, theta=theta, mask=mask,
                     global_params=state.global_params,
                     residual=state.residual, ps_residual=state.ps_residual,
-                    qkey=qkey, wkey=wkey)
+                    qkey=qkey, wkey=wkey, phy=state.phy)
 
     # --- BestTracking (Eq. 10) + next state. ---
     global_loss = eval_on_dg(out.global_params)
@@ -231,7 +237,7 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
         workers=workers, global_params=out.global_params, gbest=gbest,
         sel=SelectionState(prev_theta_mean=theta_mean),
         round_idx=state.round_idx + 1, eta=state.eta,
-        residual=out.residual, ps_residual=out.ps_residual)
+        residual=out.residual, ps_residual=out.ps_residual, phy=out.phy)
     return next_state, pipe.telemetry(losses=eval_losses, theta=theta,
                                       mask=mask, global_loss=global_loss,
                                       outcome=out)

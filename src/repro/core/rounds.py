@@ -10,9 +10,12 @@ same six stages over stacked-worker pytrees (leading dim C):
                  selection (`score_select`; fedavg = all-ones, dsl =
                  single best)
   Uplink         per-worker delta compression with error feedback and
-                 per-worker wire-tier resolution (`uplink`)
-  Aggregate      channel + Eq. 7 (`comm.channel.receive`: masked mean,
-                 coordinate-wise median, or trimmed mean)
+                 per-worker wire-tier resolution (`uplink`; N tiers
+                 ranked by Eq.-5 score or instantaneous SNR)
+  Aggregate      phy link + Eq. 7 (`comm.channel.receive` over the
+                 evolved `comm.phy.PhyState`: delivery, distortion,
+                 then masked mean / coordinate-wise median / trimmed
+                 mean)
   Downlink       the PS broadcast of the global update, optionally
                  quantized with PS-side error feedback (`downlink`)
   BestTracking   Eq. 9/10 local/global best refresh (`track_local_best`
@@ -23,9 +26,10 @@ engines instantiate it once per (algorithm, comm, C) and call
 `select` / `wire` / `telemetry`. The Eq.-7-through-the-wire block
 (compress_with_ef -> select_residual -> channel.receive -> downlink ->
 round_record) lives ONLY here — `wire_round` — so every comm feature
-(robust aggregation, downlink compression, adaptive bits, future fading
-or async stages) lands once and reaches the paper engine, the mesh
-engine, and the FedAvg baseline simultaneously.
+(robust aggregation, downlink compression, adaptive bits, Rayleigh
+fading + airtime/energy accounting, future async stages) lands once
+and reaches the paper engine, the mesh engine, and the FedAvg baseline
+simultaneously.
 
 All stages are pure `(carry, ctx) -> (carry, telemetry)`-style functions
 of stacked pytrees: no Python state, jit/vmap/spmd-safe (the mesh engine
@@ -43,7 +47,9 @@ import jax.numpy as jnp
 from repro.comm import budget as comm_budget
 from repro.comm import channel as comm_channel
 from repro.comm import compress as comm_compress
+from repro.comm import phy as comm_phy
 from repro.comm.budget import CommConfig
+from repro.comm.phy import PhyState
 from repro.core import selection
 from repro.core.selection import SelectionState
 
@@ -68,6 +74,9 @@ class RoundTelemetry(NamedTuple):
     bytes_down: Array         # () broadcast bytes (downlink-compressed)
     delivered: Array          # () uploads surviving the channel
     compression_ratio: Array  # () dense payload / mean uplink payload
+    airtime_s: Array          # () uplink airtime (SNR->rate, comm.phy)
+    energy_j: Array           # () transmit energy = tx_power * airtime
+    mean_snr_db: Array        # () fleet-mean instantaneous received SNR
 
     # pre-refactor field names, kept so existing consumers read the
     # unified record unchanged
@@ -87,6 +96,7 @@ class WireOutcome(NamedTuple):
     ps_residual: PyTree       # PS-side downlink EF state
     mask_eff: Array           # (C,) post-channel survivor mask
     record: comm_budget.CommRecord
+    phy: Any = None           # advanced PhyState (None for phy-less calls)
 
 
 # ---------------------------------------------------------------------------
@@ -120,28 +130,38 @@ def score_select(algorithm: str, losses: Array, eta: Array, tau: float,
 # Uplink stage
 # ---------------------------------------------------------------------------
 
-def tier_masks(comm: CommConfig, theta: Array
+def tier_masks(comm: CommConfig, theta: Array, snr_db: Array = None
                ) -> tuple[tuple[CommConfig, ...], Array]:
     """Per-worker wire-config resolution: with `adaptive_bits`, the PS
-    assigns the base config to the better Eq.-5 half of the fleet and
-    one tier fewer bits to the worse half. Returns (tiers, lo) where lo
-    is the (C,) degraded-tier indicator (None when uniform)."""
+    splits the fleet over the `uplink_tiers` degradation chain by rank —
+    Eq.-5 score (`tier_rank="score"`, lower theta = better) or
+    instantaneous SNR (`tier_rank="snr"`, higher SNR = more bits; falls
+    back to score when no PhyState is threaded). Tier t covers ranks
+    [ceil(C t / T), ceil(C (t+1) / T)), so with T=2 the better
+    ceil(C/2) workers keep the base config — exactly the legacy split.
+    Returns (tiers, tier_idx) where tier_idx is the (C,) int32 tier
+    index (None when uniform)."""
     tiers = comm_budget.uplink_tiers(comm)
     if len(tiers) == 1:
         return tiers, None
     C = theta.shape[0]
-    rank = jnp.argsort(jnp.argsort(theta))  # 0 = best theta
-    lo = (rank >= (C + 1) // 2).astype(jnp.float32)
-    return tiers, lo
+    key_arr = (-snr_db if comm.tier_rank == "snr" and snr_db is not None
+               else theta)
+    rank = jnp.argsort(jnp.argsort(key_arr))  # 0 = best
+    T = len(tiers)
+    tier_idx = jnp.zeros((C,), jnp.int32)
+    for t in range(1, T):
+        tier_idx = tier_idx + (rank >= -(-C * t // T)).astype(jnp.int32)
+    return tiers, tier_idx
 
 
 def uplink(comm: CommConfig, delta: PyTree, residual: PyTree, theta: Array,
-           mask: Array, key: Array, *, axis_name: Any = None
-           ) -> tuple[PyTree, PyTree, Array]:
+           mask: Array, key: Array, *, snr_db: Array = None,
+           axis_name: Any = None) -> tuple[PyTree, PyTree, Array]:
     """Uplink stage: compress each worker's delta (+ error feedback),
     resolving per-worker wire tiers. Residuals advance only for workers
     whose upload was attempted (Eq.-6 selected). Returns
-    (wire, new_residual, tier_lo)."""
+    (wire, new_residual, tier_idx)."""
     C = theta.shape[0]
     keys = jax.random.split(key, C)
 
@@ -150,22 +170,21 @@ def uplink(comm: CommConfig, delta: PyTree, residual: PyTree, theta: Array,
             functools.partial(comm_compress.compress_with_ef, tcfg),
             spmd_axis_name=axis_name)(delta, residual, keys)
 
-    tiers, tier_lo = tier_masks(comm, theta)
-    if tier_lo is None:
-        wire, new_res = run(tiers[0])
-    else:
-        w_hi, r_hi = run(tiers[0])
-        w_lo, r_lo = run(tiers[1])
+    tiers, tier_idx = tier_masks(comm, theta, snr_db)
+    wire, new_res = run(tiers[0])
+    for t in range(1, len(tiers)):
+        w_t, r_t = run(tiers[t])
 
-        def pick(a, b):
+        def pick(a, b, t=t):
             return jax.tree.map(
                 lambda x, y: jnp.where(
-                    tier_lo.reshape((-1,) + (1,) * (x.ndim - 1)) > 0, y, x),
+                    (tier_idx == t).reshape((-1,) + (1,) * (x.ndim - 1)),
+                    y, x),
                 a, b)
 
-        wire, new_res = pick(w_hi, w_lo), pick(r_hi, r_lo)
+        wire, new_res = pick(wire, w_t), pick(new_res, r_t)
     new_residual = comm_compress.select_residual(mask, new_res, residual)
-    return wire, new_residual, tier_lo
+    return wire, new_residual, tier_idx
 
 
 # ---------------------------------------------------------------------------
@@ -204,27 +223,46 @@ def init_ps_residual(params: PyTree) -> PyTree:
 def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
                mask: Array, global_params: PyTree, residual: PyTree,
                ps_residual: PyTree, qkey: Array, wkey: Array,
-               num_workers: int, axis_name: Any = None,
+               num_workers: int, phy: PhyState = None,
+               axis_name: Any = None,
                uplink_fn: Callable = uplink,
                aggregate_fn: Callable = comm_channel.receive,
                downlink_fn: Callable = downlink) -> WireOutcome:
-    """Uplink -> Aggregate -> Downlink with byte accounting: the single
-    home of the wire pipeline shared by every engine. Stage functions
-    are injectable (fading channels, async staleness, ... plug in
-    here)."""
-    wire, residual, tier_lo = uplink_fn(comm, delta, residual, theta, mask,
-                                        qkey, axis_name=axis_name)
+    """Uplink -> Aggregate -> Downlink with byte/airtime accounting: the
+    single home of the wire pipeline shared by every engine. Stage
+    functions are injectable (async staleness, ... plug in here).
+
+    `phy` is the per-worker channel state (comm.phy.PhyState): the
+    fading gains evolve first (block fading — one draw per round, on
+    the fold_in(wkey, PHY_SALT) stream so the legacy key structure is
+    untouched), the round then runs against the evolved instantaneous
+    SNRs (tier ranking, outage, distortion, airtime/energy), and the
+    advanced state (with refreshed delivery ages) returns in the
+    outcome. With phy=None the wire prices airtime at the shared
+    cfg.snr_db and no per-worker SNR effects apply."""
+    if phy is not None:
+        phy = comm_phy.evolve(comm, phy,
+                              jax.random.fold_in(wkey, comm_phy.PHY_SALT))
+        snr_db = phy.snr_db
+    else:
+        snr_db = None
+    wire, residual, tier_idx = uplink_fn(comm, delta, residual, theta, mask,
+                                         qkey, snr_db=snr_db,
+                                         axis_name=axis_name)
     agg_params, mask_eff = aggregate_fn(comm, global_params, wire, mask,
-                                        wkey)
+                                        wkey, snr_db=snr_db)
     bcast, ps_residual = downlink_fn(comm, agg_params, global_params,
                                      ps_residual,
                                      jax.random.fold_in(qkey,
                                                         _DOWNLINK_SALT))
     rec = comm_budget.round_record(comm, global_params, num_workers, mask,
-                                   mask_eff, tier_lo=tier_lo)
+                                   mask_eff, tier_idx=tier_idx,
+                                   snr_db=snr_db)
+    if phy is not None:
+        phy = comm_phy.advance_age(phy, mask_eff)
     return WireOutcome(global_params=bcast, residual=residual,
                        ps_residual=ps_residual, mask_eff=mask_eff,
-                       record=rec)
+                       record=rec, phy=phy)
 
 
 # ---------------------------------------------------------------------------
@@ -294,7 +332,7 @@ class RoundPipeline(NamedTuple):
         tel = pipe.telemetry(losses=..., ..., outcome=out)
 
     keeping only their LocalUpdate / BestTracking stages local. Stage
-    fields are swappable for new scenarios (e.g. a fading-channel
+    fields are swappable for new scenarios (e.g. a staleness-weighted
     aggregate_fn) without touching any engine."""
     algorithm: str
     comm: CommConfig
@@ -314,11 +352,11 @@ class RoundPipeline(NamedTuple):
 
     def wire(self, *, delta: PyTree, theta: Array, mask: Array,
              global_params: PyTree, residual: PyTree, ps_residual: PyTree,
-             qkey: Array, wkey: Array) -> WireOutcome:
+             qkey: Array, wkey: Array, phy: PhyState = None) -> WireOutcome:
         return wire_round(self.comm, delta=delta, theta=theta, mask=mask,
                           global_params=global_params, residual=residual,
                           ps_residual=ps_residual, qkey=qkey, wkey=wkey,
-                          num_workers=self.num_workers,
+                          num_workers=self.num_workers, phy=phy,
                           axis_name=self.axis_name,
                           uplink_fn=self.uplink_fn,
                           aggregate_fn=self.aggregate_fn,
@@ -335,7 +373,9 @@ class RoundPipeline(NamedTuple):
                 mask, self.n_params),
             bytes_up=rec.bytes_up, bytes_down=rec.bytes_down,
             delivered=rec.delivered,
-            compression_ratio=rec.compression_ratio)
+            compression_ratio=rec.compression_ratio,
+            airtime_s=rec.airtime_s, energy_j=rec.energy_j,
+            mean_snr_db=rec.mean_snr_db)
 
 
 def count_params(params: PyTree) -> int:

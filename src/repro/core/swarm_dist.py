@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.comm import compress as comm_compress
 from repro.comm import channel as comm_channel
+from repro.comm import phy as comm_phy
 from repro.comm.budget import CommConfig
 from repro.core import pso, rounds
 from repro.core.pso import PsoHyperParams
@@ -71,6 +72,7 @@ class DistSwarmState(NamedTuple):
     round_idx: Array          # ()
     residual: PyTree          # (W, ...) uplink error-feedback state
     ps_residual: PyTree       # PS-side downlink error-feedback state
+    phy: comm_phy.PhyState    # (W,) per-worker channel state (comm.phy)
 
 
 def init_state(global_params: PyTree, cfg: DistSwarmConfig,
@@ -92,6 +94,7 @@ def init_state(global_params: PyTree, cfg: DistSwarmConfig,
         round_idx=jnp.zeros((), jnp.int32),
         residual=stack(comm_compress.init_residual(global_params)),
         ps_residual=rounds.init_ps_residual(global_params),
+        phy=comm_phy.init_state(cfg.comm, W),
     )
 
 
@@ -195,7 +198,7 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
                         global_params=state.global_params,
                         residual=state.residual,
                         ps_residual=state.ps_residual,
-                        qkey=qkey, wkey=wkey)
+                        qkey=qkey, wkey=wkey, phy=state.phy)
         global_loss = eval_one(out.global_params)
 
         # --- BestTracking (Eqs. 9-10) -------------------------------------
@@ -211,7 +214,7 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
             gbest_params=gbest_params, gbest_loss=gbest_loss,
             prev_theta_mean=theta_mean, eta=state.eta,
             round_idx=state.round_idx + 1, residual=out.residual,
-            ps_residual=out.ps_residual)
+            ps_residual=out.ps_residual, phy=out.phy)
         return next_state, pipe.telemetry(losses=losses, theta=theta,
                                           mask=mask,
                                           global_loss=global_loss,
@@ -268,12 +271,13 @@ def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
                         global_params=state.global_params,
                         residual=state.residual,
                         ps_residual=state.ps_residual,
-                        qkey=qkey, wkey=wkey)
+                        qkey=qkey, wkey=wkey, phy=state.phy)
         global_loss = loss_fn(out.global_params, eval_batch)
         next_state = state._replace(global_params=out.global_params,
                                     round_idx=state.round_idx + 1,
                                     residual=out.residual,
-                                    ps_residual=out.ps_residual)
+                                    ps_residual=out.ps_residual,
+                                    phy=out.phy)
         return next_state, pipe.telemetry(losses=losses, theta=theta,
                                           mask=mask,
                                           global_loss=global_loss,

@@ -69,10 +69,14 @@ def describe_scenarios() -> list[tuple[str, str]]:
             wire.append(f"down:{s.comm.downlink_compressor}")
         if s.comm.channel != "ideal":
             wire.append(s.comm.channel)
+        if s.comm.fading != "none":
+            wire.append(f"{s.comm.fading}@{s.comm.doppler_rho}")
+        if s.comm.outage_snr_db is not None:
+            wire.append(f"outage>{s.comm.outage_snr_db:g}dB")
         if s.comm.byzantine:
             wire.append(f"byz={s.comm.byzantine}:{s.comm.aggregator}")
         if s.comm.adaptive_bits:
-            wire.append("adaptive")
+            wire.append(f"tiers={s.comm.num_tiers}:{s.comm.tier_rank}")
         rows.append((name, what + (f" [{' '.join(wire)}]" if wire else "")))
     return rows
 
@@ -133,6 +137,26 @@ register_scenario(_comm("noisy-uplink-awgn",
                         CommConfig(channel="awgn", snr_db=10.0)))
 register_scenario(_comm("adaptive-tiers",
                         CommConfig(compressor="int8", adaptive_bits=True)))
+
+# -- physical-layer regimes (comm.phy: Rayleigh uplinks, SNR->rate) ---------
+register_scenario(_comm("rayleigh-uplink",
+                        CommConfig(channel="awgn", snr_db=10.0,
+                                   fading="rayleigh", doppler_rho=0.9)))
+register_scenario(_comm("rayleigh-outage",
+                        CommConfig(channel="composite", drop_prob=0.05,
+                                   snr_db=10.0, fading="rayleigh",
+                                   doppler_rho=0.9, outage_snr_db=0.0)))
+register_scenario(_comm("snr-tiered-bits",
+                        CommConfig(channel="awgn", snr_db=15.0,
+                                   fading="rayleigh", doppler_rho=0.9,
+                                   adaptive_bits=True, num_tiers=3,
+                                   tier_rank="snr")))
+register_scenario(_comm("energy-budget",
+                        CommConfig(channel="awgn", snr_db=5.0,
+                                   fading="rayleigh", doppler_rho=0.8,
+                                   compressor="int4", tx_power_w=0.2,
+                                   bandwidth_hz=200e3,
+                                   pathloss_spread_db=6.0)))
 
 # -- small teaching fleets (the examples) -----------------------------------
 register_scenario(ExperimentSpec(

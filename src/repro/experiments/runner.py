@@ -132,7 +132,8 @@ def _prepare_paper(spec: ExperimentSpec) -> Prepared:
                      local_epochs=a.local_epochs, batch_size=a.batch_size,
                      hp=a.hp, comm=spec.comm)
     key = jax.random.PRNGKey(r.seed + 1)
-    state = mdsl.init_state(key, img_model.init, d.num_workers, eta)
+    state = mdsl.init_state(key, img_model.init, d.num_workers, eta,
+                            comm=spec.comm)
     n_params = mdsl.count_params(state.global_params)
 
     @jax.jit
@@ -171,6 +172,7 @@ def _run_paper(prep: Prepared, verbose: bool) -> dict:
                   downlink_config(comm), state.global_params),
               "acc": [], "global_loss": [], "selected": [], "delivered": [],
               "uploaded_params": [], "bytes_up": [], "bytes_down": [],
+              "airtime_s": [], "energy_j": [], "mean_snr_db": [],
               "round_time_s": []}
 
     metrics = None
@@ -191,6 +193,9 @@ def _run_paper(prep: Prepared, verbose: bool) -> dict:
             num_workers=d.num_workers)
         record["bytes_up"].append(up)
         record["bytes_down"].append(down)
+        record["airtime_s"].append(float(metrics.airtime_s))
+        record["energy_j"].append(float(metrics.energy_j))
+        record["mean_snr_db"].append(float(metrics.mean_snr_db))
         record["round_time_s"].append(round(time.time() - t0, 2))
         if verbose and (t % r.log_every == 0 or t == r.rounds - 1):
             print(f"[{a.algorithm}/{d.case}/{d.dataset}] "
@@ -204,6 +209,8 @@ def _run_paper(prep: Prepared, verbose: bool) -> dict:
     record["total_uploaded_params"] = float(sum(record["uploaded_params"]))
     record["total_bytes_up"] = float(sum(record["bytes_up"]))
     record["total_bytes_down"] = float(sum(record["bytes_down"]))
+    record["total_airtime_s"] = float(sum(record["airtime_s"]))
+    record["total_energy_j"] = float(sum(record["energy_j"]))
     # adaptive tiers mix payloads per worker: the fleet-mean ratio comes
     # from the in-jit accounting, matching the bytes_up column
     record["compression_ratio"] = (
@@ -284,7 +291,8 @@ def _run_mesh(prep: Prepared, verbose: bool) -> dict:
               "payload_bytes_per_worker": payload,
               "downlink_bytes_per_worker": down_payload, "global_loss": [],
               "worker_losses": [], "selected": [], "delivered": [],
-              "bytes_up": [], "bytes_down": [], "step_time_s": []}
+              "bytes_up": [], "bytes_down": [], "airtime_s": [],
+              "energy_j": [], "mean_snr_db": [], "step_time_s": []}
     for i in range(r.rounds):
         t0 = time.time()
         state, info, key = prep.step(state, key)
@@ -298,6 +306,9 @@ def _run_mesh(prep: Prepared, verbose: bool) -> dict:
             payload_up=payload, payload_down=down_payload, num_workers=W)
         record["bytes_up"].append(up)
         record["bytes_down"].append(down)
+        record["airtime_s"].append(float(info.airtime_s))
+        record["energy_j"].append(float(info.energy_j))
+        record["mean_snr_db"].append(float(info.mean_snr_db))
         record["step_time_s"].append(round(time.time() - t0, 2))
         if verbose:
             print(f"[mesh/{m.name}] step {i + 1}/{r.rounds} "
@@ -307,6 +318,8 @@ def _run_mesh(prep: Prepared, verbose: bool) -> dict:
             mgr.save(i, state.global_params, metadata={"arch": m.name})
     if mgr is not None:
         record["ckpt_steps"] = mgr.all_steps()
+    record["total_airtime_s"] = float(sum(record["airtime_s"]))
+    record["total_energy_j"] = float(sum(record["energy_j"]))
     return record
 
 
@@ -348,28 +361,69 @@ def default_out(spec: ExperimentSpec) -> Path:
             f"mesh__{spec.model.name}__s{spec.run.seed}.json")
 
 
+def _sweep_task(spec_dict: dict, path: str, verbose: bool) -> dict:
+    """One (scenario, seed) cell, spec passed as its JSON dict so the
+    task pickles cleanly into a ProcessPoolExecutor worker. Runs the
+    spec, saves its artifact, returns the metrics record."""
+    from repro.experiments.spec import from_dict
+    res = run(from_dict(spec_dict), verbose=verbose)
+    res.save(path)
+    return res.record
+
+
+def _sweep_report(spec: ExperimentSpec, record: dict, path: Path) -> None:
+    name = spec.name or f"{spec.algo.algorithm}/{spec.data.case}"
+    final = record.get("final_acc", record["global_loss"][-1])
+    print(f"[sweep] {name} s{spec.run.seed}: {final:.4f} -> {path}",
+          flush=True)
+
+
 def sweep(specs, seeds=(0,), out_dir: str | Path | None = None,
-          verbose: bool = False) -> list[RunResult]:
+          verbose: bool = False, jobs: int = 1) -> list[RunResult]:
     """Fan scenarios x seeds into consistently named artifacts, each
     embedding the full spec next to its metrics. Any `run.out` on the
     input specs is cleared: per-(scenario, seed) naming wins, so one
-    fixed path cannot clobber the rest of the sweep."""
-    results = []
+    fixed path cannot clobber the rest of the sweep.
+
+    `jobs > 1` fans the (scenario x seed) grid over a
+    ProcessPoolExecutor — each cell is an independent single-host run
+    writing its own artifact file, so the paper grid (4 algos x 3 cases
+    x 5 seeds) runs in one command (`launch/train.py --sweep ...
+    --jobs N`). Results come back in grid order either way."""
+    cells: list[tuple[ExperimentSpec, Path]] = []
     for spec in specs:
         for seed in seeds:
             s = override(spec, f"run.seed={seed}", "run.out=none")
-            res = run(s, verbose=verbose)
             path = default_out(s)
             if out_dir is not None:
                 path = Path(out_dir) / path.name
+            cells.append((s, path))
+
+    results = []
+    if jobs <= 1:
+        for s, path in cells:
+            res = run(s, verbose=verbose)
             res.save(path)
             if not verbose:
-                name = s.name or f"{s.algo.algorithm}/{s.data.case}"
-                final = res.record.get("final_acc",
-                                       res.record["global_loss"][-1])
-                print(f"[sweep] {name} s{seed}: {final:.4f} -> {path}",
-                      flush=True)
+                _sweep_report(s, res.record, path)
             results.append(res)
+        return results
+
+    import multiprocessing
+    from concurrent.futures import ProcessPoolExecutor
+
+    # fork would copy this process's initialized XLA runtime into the
+    # workers (thread-lock deadlocks); spawn gives each cell a clean
+    # interpreter
+    ctx = multiprocessing.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as ex:
+        futs = [ex.submit(_sweep_task, to_dict(s), str(path), verbose)
+                for s, path in cells]
+        for (s, path), fut in zip(cells, futs):
+            record = fut.result()
+            if not verbose:
+                _sweep_report(s, record, path)
+            results.append(RunResult(spec=s, record=record))
     return results
 
 

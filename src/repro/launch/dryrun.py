@@ -14,6 +14,8 @@ benchmarks see 1 device).
 Usage:
   python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh single
   python -m repro.launch.dryrun --all [--mesh both] [--skip-done]
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k \
+      --scenario rayleigh-uplink   # CommConfig from the registry
 """
 import argparse
 import gzip
@@ -170,6 +172,10 @@ def main() -> None:
     ap.add_argument("--algorithm", default="mdsl")
     ap.add_argument("--skip-done", action="store_true")
     ap.add_argument("--tag", default="", help="artifact suffix for perf variants")
+    ap.add_argument("--scenario", default=None,
+                    help="resolve the CommConfig from this registry "
+                         "scenario (one flag surface for comm pricing — "
+                         "fading/outage/tier scenarios included)")
     ap.add_argument("--reanalyze", action="store_true",
                     help="recompute rooflines from saved HLO (no compile)")
     args = ap.parse_args()
@@ -177,6 +183,13 @@ def main() -> None:
     if args.reanalyze:
         reanalyze_all(args.tag)
         return
+
+    comm = None
+    if args.scenario:
+        from repro.experiments.registry import get_scenario
+        comm = get_scenario(args.scenario).comm
+        if not args.tag:
+            args.tag = "__" + args.scenario.replace("/", "-")
 
     archs = ([a for a in list_archs()] if args.all or not args.arch
              else [args.arch])
@@ -203,7 +216,7 @@ def main() -> None:
                         continue
                 print(f"RUN  {arch} {shape} {mesh_kind} ...", flush=True)
                 rec = run_one(arch, shape, mesh_kind, algorithm=args.algorithm,
-                              tag=args.tag)
+                              tag=args.tag, comm=comm)
                 path.write_text(json.dumps(rec, indent=1))
                 status = "ok" if rec.get("ok") else f"FAIL {rec.get('error')}"
                 print(f"     -> {status} ({rec['total_s']}s)", flush=True)

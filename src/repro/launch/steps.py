@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.comm.budget import CommConfig
+from repro.comm.phy import PhyState
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import swarm_dist
 from repro.core.swarm_dist import DistSwarmConfig, DistSwarmState
@@ -226,7 +227,9 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         gbest_loss=scalar, prev_theta_mean=scalar, eta=wvec,
         round_idx=scalar,
         residual=pshard(state_shapes.residual, True),
-        ps_residual=pshard(state_shapes.ps_residual, False))
+        ps_residual=pshard(state_shapes.ps_residual, False),
+        phy=PhyState(h_re=wvec, h_im=wvec, pathloss_db=wvec, snr_db=wvec,
+                     age=wvec))
 
     batch_sh = _shard_batch_specs(specs["batch"], rules, mesh,
                                   worker_axes=worker_axes)
@@ -237,7 +240,9 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                    global_loss=scalar, selected_count=scalar,
                                    uploaded_params=scalar, bytes_up=scalar,
                                    bytes_down=scalar, delivered=scalar,
-                                   compression_ratio=scalar)
+                                   compression_ratio=scalar,
+                                   airtime_s=scalar, energy_j=scalar,
+                                   mean_snr_db=scalar)
 
     def wrapped(state, batch, eval_batch, key):
         with use_rules(rules, mesh):

@@ -31,9 +31,9 @@ import argparse
 from typing import Optional
 
 from repro.comm import (AGGREGATORS, BYZANTINE_MODES, CHANNELS, COMPRESSORS,
-                        CommConfig)
+                        FADING_MODELS, TIER_RANKS, CommConfig)
 from repro.experiments import (ExperimentSpec, default_out, get_scenario,
-                               describe_scenarios, override, run)
+                               describe_scenarios, override, run, sweep)
 from repro.experiments.runner import (ARTIFACTS, CASES, IMAGE_SPECS,
                                       _noniid2_groups, make_case_data,
                                       spec_from_mesh_kwargs,
@@ -45,7 +45,7 @@ SPECS = IMAGE_SPECS
 
 __all__ = ["ARTIFACTS", "CASES", "SPECS", "run_paper_experiment",
            "run_mesh_training", "make_case_data", "build_spec_from_args",
-           "main", "_noniid2_groups"]
+           "build_sweep_specs", "main", "_noniid2_groups"]
 
 
 def run_paper_experiment(algorithm: str = "mdsl", case: str = "noniid1",
@@ -96,6 +96,10 @@ _COMMON_FLAGS = [
     ("byzantine_scale", "comm.byzantine_scale"),
     ("aggregator", "comm.aggregator"), ("trim_ratio", "comm.trim_ratio"),
     ("downlink_compressor", "comm.downlink_compressor"),
+    ("fading", "comm.fading"), ("doppler_rho", "comm.doppler_rho"),
+    ("pathloss_spread_db", "comm.pathloss_spread_db"),
+    ("outage_snr_db", "comm.outage_snr_db"),
+    ("num_tiers", "comm.num_tiers"), ("tier_rank", "comm.tier_rank"),
 ]
 _PAPER_FLAGS = [
     ("case", "data.case"), ("dataset", "data.dataset"),
@@ -142,6 +146,32 @@ def build_spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
     return spec.validate()
 
 
+def build_sweep_specs(args: argparse.Namespace) -> list[ExperimentSpec]:
+    """--sweep grid: scenario presets x --sweep-axis value lists, with
+    any --set overrides applied to every cell. The full paper grid is
+    one command:
+
+        python -m repro.launch.train --sweep \\
+            paper/fig3-iid,paper/fig3-noniid1,paper/fig3-noniid2 \\
+            --sweep-axis algo.algorithm=fedavg,dsl,multi_dsl,mdsl \\
+            --seeds 0,1,2,3,4 --jobs 8
+    """
+    names = [n.strip() for n in args.sweep.split(",") if n.strip()]
+    if not names:
+        raise ValueError("--sweep needs at least one scenario name")
+    specs = [get_scenario(n) for n in names]
+    for assignment in args.overrides:
+        specs = [override(s, assignment) for s in specs]
+    for axis in args.sweep_axis:
+        path, eq, raw = axis.partition("=")
+        values = [v.strip() for v in raw.split(",") if v.strip()]
+        if not eq or not values:
+            raise ValueError(f"--sweep-axis must look like "
+                             f"key=v1,v2,..., got {axis!r}")
+        specs = [override(s, f"{path}={v}") for s in specs for v in values]
+    return [s.validate() for s in specs]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="Run one experiment: --scenario NAME [--set k=v ...], "
@@ -183,16 +213,63 @@ def main() -> None:
     ap.add_argument("--downlink-compressor", default=None,
                     choices=list(COMPRESSORS))
     ap.add_argument("--adaptive-bits", action="store_true")
+    # physical layer (comm.phy)
+    ap.add_argument("--fading", default=None, choices=list(FADING_MODELS))
+    ap.add_argument("--doppler-rho", type=float, default=None)
+    ap.add_argument("--pathloss-spread-db", type=float, default=None)
+    ap.add_argument("--outage-snr-db", type=float, default=None)
+    ap.add_argument("--num-tiers", type=int, default=None)
+    ap.add_argument("--tier-rank", default=None, choices=list(TIER_RANKS))
     # mesh mode
     ap.add_argument("--arch", default=None)
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
+    # sweep mode: --sweep S1,S2 [--sweep-axis k=v1,v2]... [--seeds ..]
+    ap.add_argument("--sweep", default=None, metavar="SCENARIOS",
+                    help="comma-separated scenario names to sweep "
+                         "(each crossed with --sweep-axis values, "
+                         "--seeds, and any --set overrides)")
+    ap.add_argument("--sweep-axis", action="append", default=[],
+                    metavar="KEY=V1,V2,...",
+                    help="cross-product axis over a dotted spec path, "
+                         "e.g. algo.algorithm=fedavg,dsl,multi_dsl,mdsl "
+                         "(repeatable)")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated seeds for --sweep (default 0)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="process-pool fan-out for --sweep (1 = serial)")
     args = ap.parse_args()
 
     if args.list_scenarios:
         width = max(len(n) for n, _ in describe_scenarios())
         for name, what in describe_scenarios():
             print(f"{name.ljust(width)}  {what}")
+        return
+
+    if args.sweep:
+        # same fail-fast contract as single runs: a per-axis flag that
+        # --sweep would silently drop fakes results for a config the
+        # user never ran — demand the --set / --sweep-axis spelling
+        stray = [attr for attr, _ in
+                 _COMMON_FLAGS + _PAPER_FLAGS + _MESH_FLAGS
+                 if getattr(args, attr) is not None]
+        stray += [f for f in ("no_error_feedback", "adaptive_bits")
+                  if getattr(args, f)]
+        if stray:
+            names = ", ".join("--" + a.replace("_", "-") for a in stray)
+            ap.error(f"{names} does not combine with --sweep — spell "
+                     f"shared values as --set key=value and swept values "
+                     f"as --sweep-axis key=v1,v2")
+        try:
+            specs = build_sweep_specs(args)
+            seeds = ([int(s) for s in args.seeds.split(",") if s.strip()]
+                     if args.seeds else [0])
+        except ValueError as e:
+            ap.error(str(e))
+        results = sweep(specs, seeds=seeds, jobs=args.jobs)
+        print(f"swept {len(results)} runs "
+              f"({len(specs)} specs x {len(seeds)} seeds, "
+              f"jobs={args.jobs})")
         return
 
     try:

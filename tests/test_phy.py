@@ -1,0 +1,354 @@
+"""comm.phy — per-worker physical layer: Rayleigh fading statistics,
+LinkModel composability (erasure x AWGN x outage), SNR->rate airtime
+and energy accounting, N-tier adaptive bit allocation, and the
+unit-gain-fading ≡ ideal equivalence through the full round pipeline."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import budget, channel, phy
+from repro.comm.budget import CommConfig
+from repro.core import rounds
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestPhyState:
+    def test_init_is_unit_gain(self):
+        cfg = CommConfig(fading="rayleigh")
+        st_ = phy.init_state(cfg, 8)
+        np.testing.assert_array_equal(np.asarray(st_.h_re), 1.0)
+        np.testing.assert_array_equal(np.asarray(st_.h_im), 0.0)
+        np.testing.assert_allclose(np.asarray(st_.snr_db), cfg.snr_db,
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(st_.age), 0)
+
+    def test_pathloss_profile_spreads_snr(self):
+        cfg = CommConfig(pathloss_spread_db=12.0)
+        st_ = phy.init_state(cfg, 4)
+        snr = np.asarray(st_.snr_db)
+        np.testing.assert_allclose(snr, cfg.snr_db - np.asarray(
+            [0.0, 4.0, 8.0, 12.0]), rtol=1e-5)
+
+    def test_evolve_noop_without_fading(self):
+        cfg = CommConfig()
+        st_ = phy.init_state(cfg, 4)
+        assert phy.evolve(cfg, st_, KEY) is st_
+
+    def test_static_channel_at_rho_one(self):
+        cfg = CommConfig(fading="rayleigh", doppler_rho=1.0)
+        st_ = phy.init_state(cfg, 4)
+        out = phy.evolve(cfg, st_, KEY)
+        np.testing.assert_array_equal(np.asarray(out.h_re),
+                                      np.asarray(st_.h_re))
+        np.testing.assert_array_equal(np.asarray(out.h_im),
+                                      np.asarray(st_.h_im))
+
+    @hp.given(st.floats(min_value=0.1, max_value=0.95), st.integers(0, 3))
+    @hp.settings(max_examples=12, deadline=None)
+    def test_fading_gain_unbiased(self, rho, seed):
+        """E|h_t|^2 = 1 at every round (unit-gain init + Gauss-Markov
+        with unit innovation power), so the fading adds no systematic
+        uplink gain or attenuation."""
+        C = 512
+        cfg = CommConfig(fading="rayleigh", doppler_rho=float(rho))
+        st_ = phy.init_state(cfg, C)
+        key = jax.random.PRNGKey(seed)
+        gains = []
+        for t in range(40):
+            key, k = jax.random.split(key)
+            st_ = phy.evolve(cfg, st_, k)
+            gains.append(np.asarray(st_.h_re) ** 2
+                         + np.asarray(st_.h_im) ** 2)
+        assert np.mean(gains) == pytest.approx(1.0, abs=0.08)
+
+    def test_age_tracks_delivery(self):
+        cfg = CommConfig()
+        st_ = phy.init_state(cfg, 3)
+        st_ = phy.advance_age(st_, jnp.asarray([1.0, 0.0, 0.0]))
+        st_ = phy.advance_age(st_, jnp.asarray([0.0, 1.0, 0.0]))
+        np.testing.assert_array_equal(np.asarray(st_.age), [1, 0, 2])
+
+
+class TestLinkModel:
+    def test_legacy_enum_decomposition(self):
+        ideal = phy.link_model(CommConfig())
+        assert ideal.drop_prob == 0.0 and not ideal.awgn
+        era = phy.link_model(CommConfig(channel="erasure", drop_prob=0.3))
+        assert era.drop_prob == 0.3 and not era.awgn
+        awgn = phy.link_model(CommConfig(channel="awgn"))
+        assert awgn.drop_prob == 0.0 and awgn.awgn
+        both = phy.link_model(CommConfig(channel="composite",
+                                         drop_prob=0.3))
+        assert both.drop_prob == 0.3 and both.awgn
+
+    def test_composite_applies_erasure_and_awgn_in_one_round(self):
+        """Regression for the old enum's non-composability: with
+        channel="composite", drop_prob>0 AND a finite snr_db both act
+        on the same round — packets drop AND the survivors' aggregate
+        is noisy (erasure_mask used to silently no-op unless
+        channel == "erasure")."""
+        cfg = CommConfig(channel="composite", drop_prob=0.5, snr_db=10.0)
+        g = {"x": jnp.zeros(64)}
+        wire = {"x": jax.random.normal(KEY, (8, 64))}
+        mask = jnp.ones(8)
+        saw_drop = False
+        key = KEY
+        for _ in range(20):
+            key, k = jax.random.split(key)
+            out, mask_eff = channel.receive(cfg, g, wire, mask, k)
+            surv = np.asarray(mask_eff).astype(bool)
+            if 0 < surv.sum() < 8:
+                saw_drop = True
+                clean = np.asarray(wire["x"])[surv].mean(axis=0)
+                noise = np.abs(np.asarray(out["x"]) - clean)
+                assert noise.max() > 1e-4   # AWGN hit the same round
+        assert saw_drop                     # erasure hit too
+
+    def test_outage_drops_faded_workers(self):
+        cfg = CommConfig(fading="rayleigh", outage_snr_db=0.0, snr_db=10.0)
+        mask = jnp.ones(4)
+        snr = jnp.asarray([5.0, -3.0, 12.0, -0.1])
+        out = phy.delivery_mask(cfg, mask, KEY, snr_db=snr)
+        np.testing.assert_array_equal(np.asarray(out), [1.0, 0.0, 1.0, 0.0])
+
+    def test_outage_composes_with_packet_erasure(self):
+        cfg = CommConfig(channel="composite", drop_prob=0.5,
+                         fading="rayleigh", outage_snr_db=0.0)
+        C = 64
+        mask = jnp.ones(C)
+        # first half above the outage cut, second half below
+        snr = jnp.concatenate([jnp.full((C // 2,), 10.0),
+                               jnp.full((C // 2,), -10.0)])
+        out = np.asarray(phy.delivery_mask(cfg, mask, KEY, snr_db=snr))
+        np.testing.assert_array_equal(out[C // 2:], 0.0)  # outage filter
+        assert 0 < out[: C // 2].sum() < C // 2           # erasure filter
+
+    def test_outage_erasure_composes_with_robust_aggregators(self):
+        """Satellite: SNR-outage delivery loss flows into the robust
+        Eq.-7 order statistics exactly like packet erasure — the
+        median/trimmed mean run over the delivered subset only."""
+        C, n = 9, 16
+        d = jax.random.normal(KEY, (C, n))
+        snr = jnp.asarray([10.0] * 5 + [-10.0] * 4)   # last 4 in outage
+        for agg in ("median", "trimmed_mean"):
+            cfg = CommConfig(aggregator=agg, fading="rayleigh",
+                             outage_snr_db=0.0, trim_ratio=0.2)
+            g = {"x": jnp.zeros(n)}
+            out, mask_eff = channel.receive(cfg, g, {"x": d}, jnp.ones(C),
+                                            KEY, snr_db=snr)
+            np.testing.assert_array_equal(np.asarray(mask_eff),
+                                          [1.0] * 5 + [0.0] * 4)
+            dd = np.sort(np.asarray(d)[:5], axis=0)
+            if agg == "median":
+                want = dd[2]
+            else:
+                t = int(0.2 * 5)
+                want = dd[t:5 - t].mean(axis=0)
+            np.testing.assert_allclose(np.asarray(out["x"]), want,
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_per_worker_awgn_tracks_individual_snr(self):
+        """With fading, distortion is per-upload at each worker's own
+        SNR: a deep-faded worker's decode is much noisier than a
+        well-faded one's."""
+        C, n = 2, 4096
+        d = jnp.ones((C, n))
+        snr = jnp.asarray([30.0, -10.0])
+        sigma = phy.noise_sigma_per_worker(d, snr)
+        assert float(sigma[0, 0]) < 0.1 < float(sigma[1, 0])
+        # and the mean-path aggregate with only the GOOD worker selected
+        # is far cleaner than with only the bad one
+        cfg = CommConfig(channel="awgn", fading="rayleigh")
+        g = {"x": jnp.zeros(n)}
+        errs = []
+        for sel in ([1.0, 0.0], [0.0, 1.0]):
+            out, _ = channel.receive(cfg, g, {"x": d}, jnp.asarray(sel),
+                                     KEY, snr_db=snr)
+            errs.append(float(jnp.abs(out["x"] - 1.0).mean()))
+        assert errs[0] < 0.1 < errs[1]
+
+
+class TestValidation:
+    def test_snr_rank_needs_per_worker_snr(self):
+        with pytest.raises(ValueError):
+            CommConfig(adaptive_bits=True, tier_rank="snr").validate()
+        CommConfig(adaptive_bits=True, tier_rank="snr",
+                   fading="rayleigh").validate()
+        CommConfig(adaptive_bits=True, tier_rank="snr",
+                   pathloss_spread_db=6.0).validate()
+
+    def test_outage_needs_per_worker_snr(self):
+        """A static fleet-wide SNR makes the outage cut an all-or-
+        nothing blackout — rejected at the config layer so direct
+        engine users get the same protection as spec users."""
+        with pytest.raises(ValueError):
+            CommConfig(outage_snr_db=25.0).validate()
+        CommConfig(outage_snr_db=0.0, fading="rayleigh").validate()
+
+    def test_new_enum_fields_validated(self):
+        for bad in (dict(fading="rician"), dict(rate_model="polar"),
+                    dict(tier_rank="random"), dict(doppler_rho=1.5),
+                    dict(num_tiers=1), dict(bandwidth_hz=0.0),
+                    dict(tx_power_w=-1.0), dict(coding_gap_db=-1.0)):
+            with pytest.raises(ValueError):
+                CommConfig(**bad).validate()
+
+
+class TestRateModel:
+    def test_rate_monotone_in_snr(self):
+        cfg = CommConfig()
+        snrs = jnp.asarray([-10.0, 0.0, 10.0, 20.0, 30.0])
+        rates = np.asarray(budget.rate_bps(cfg, snrs))
+        assert np.all(np.diff(rates) > 0)
+        assert np.all(rates > 0)
+
+    def test_coding_gap_costs_rate(self):
+        snr = jnp.asarray([10.0])
+        ideal = budget.rate_bps(CommConfig(coding_gap_db=0.0), snr)
+        gapped = budget.rate_bps(CommConfig(coding_gap_db=3.0), snr)
+        assert float(gapped[0]) < float(ideal[0])
+
+    def test_airtime_and_energy_monotone_in_snr(self):
+        """Satellite: a better channel drains less airtime and energy
+        for the same payload."""
+        tree = {"x": jnp.zeros(1000)}
+        mask = jnp.ones(4)
+        prev_airtime, prev_energy = np.inf, np.inf
+        for snr in (0.0, 10.0, 20.0):
+            rec = budget.round_record(CommConfig(), tree, 4, mask, mask,
+                                      snr_db=jnp.full((4,), snr))
+            assert 0 < float(rec.airtime_s) < prev_airtime
+            assert 0 < float(rec.energy_j) < prev_energy
+            prev_airtime = float(rec.airtime_s)
+            prev_energy = float(rec.energy_j)
+
+    def test_energy_scales_with_tx_power(self):
+        tree = {"x": jnp.zeros(1000)}
+        mask = jnp.ones(4)
+        lo = budget.round_record(CommConfig(tx_power_w=0.1), tree, 4, mask,
+                                 mask)
+        hi = budget.round_record(CommConfig(tx_power_w=0.2), tree, 4, mask,
+                                 mask)
+        assert float(hi.energy_j) == pytest.approx(2 * float(lo.energy_j),
+                                                   rel=1e-5)
+        assert float(hi.airtime_s) == pytest.approx(float(lo.airtime_s),
+                                                    rel=1e-6)
+
+    def test_lost_packets_still_charge_airtime(self):
+        tree = {"x": jnp.zeros(1000)}
+        mask = jnp.ones(4)
+        none_lost = budget.round_record(CommConfig(), tree, 4, mask, mask)
+        all_lost = budget.round_record(CommConfig(), tree, 4, mask,
+                                       jnp.zeros(4))
+        assert float(all_lost.airtime_s) == float(none_lost.airtime_s)
+
+
+class TestNTierMasks:
+    @pytest.mark.parametrize("C,T", [(4, 2), (5, 2), (7, 3), (12, 3),
+                                     (9, 4)])
+    def test_tier_masks_partition_fleet(self, C, T):
+        """Satellite: the N tier masks partition the worker set — every
+        worker lands on exactly one tier, group sizes follow the
+        ceil(C t / T) boundaries."""
+        cfg = CommConfig(adaptive_bits=True, num_tiers=T)
+        theta = jax.random.normal(jax.random.fold_in(KEY, C * T), (C,))
+        tiers, tier_idx = rounds.tier_masks(cfg, theta)
+        assert len(tiers) == min(T, 3)  # identity->int8->int4 floor
+        idx = np.asarray(tier_idx)
+        assert idx.min() == 0 and idx.max() == len(tiers) - 1
+        counts = np.bincount(idx, minlength=len(tiers))
+        assert counts.sum() == C            # a partition: each worker once
+        bounds = [-(-C * t // len(tiers)) for t in range(len(tiers) + 1)]
+        np.testing.assert_array_equal(counts, np.diff(bounds))
+
+    def test_two_tier_matches_legacy_split(self):
+        cfg = CommConfig(compressor="int8", adaptive_bits=True)
+        theta = jnp.asarray([3.0, 0.5, 2.0, 1.0])  # best: 1, 3, 2, 0
+        tiers, idx = rounds.tier_masks(cfg, theta)
+        assert [t.compressor for t in tiers] == ["int8", "int4"]
+        np.testing.assert_array_equal(np.asarray(idx), [1, 0, 1, 0])
+
+    def test_three_tier_chain_from_identity(self):
+        cfg = CommConfig(adaptive_bits=True, num_tiers=3)
+        tiers = budget.uplink_tiers(cfg)
+        assert [t.compressor for t in tiers] == ["identity", "int8", "int4"]
+
+    def test_snr_rank_gives_bits_to_good_channels(self):
+        cfg = CommConfig(adaptive_bits=True, num_tiers=3, tier_rank="snr",
+                         fading="rayleigh")
+        theta = jnp.asarray([0.0, 1.0, 2.0, 3.0, 4.0, 5.0])
+        snr = jnp.asarray([-5.0, 20.0, 3.0, 15.0, -1.0, 8.0])
+        _, idx = rounds.tier_masks(cfg, theta, snr_db=snr)
+        idx = np.asarray(idx)
+        # best SNR workers (1, 3) on tier 0; worst (0, 4) on tier 2
+        np.testing.assert_array_equal(idx, [2, 0, 1, 0, 2, 1])
+
+    def test_snr_rank_falls_back_to_score_without_phy(self):
+        cfg = CommConfig(adaptive_bits=True, tier_rank="snr",
+                         fading="rayleigh")
+        theta = jnp.asarray([3.0, 0.5, 2.0, 1.0])
+        _, idx = rounds.tier_masks(cfg, theta, snr_db=None)
+        np.testing.assert_array_equal(np.asarray(idx), [1, 0, 1, 0])
+
+    def test_n_tier_bytes_decrease_with_more_tiers(self):
+        tree = {"x": jnp.zeros(100000)}
+        mask = jnp.ones(9)
+        theta = jnp.arange(9, dtype=jnp.float32)
+        recs = []
+        for T in (2, 3):
+            cfg = CommConfig(adaptive_bits=True, num_tiers=T)
+            _, idx = rounds.tier_masks(cfg, theta)
+            recs.append(budget.round_record(cfg, tree, 9, mask, mask,
+                                            tier_idx=idx))
+        assert float(recs[1].bytes_up) < float(recs[0].bytes_up)
+
+
+def _phy_paper_scenario(comm, rounds_n=3):
+    """The test_rounds paper scenario, parameterized by CommConfig."""
+    from test_rounds import _paper_scenario
+    return _paper_scenario(comm=comm, rounds_n=rounds_n)
+
+
+class TestPipelineEquivalence:
+    def test_unit_gain_fading_bit_equal_to_ideal(self):
+        """Satellite: fading="rayleigh" with doppler_rho=1 keeps the
+        unit-gain init forever — SNRs collapse to the shared snr_db and
+        an ideal channel produces bit-identical global params (the phy
+        state rides along without touching the values)."""
+        base, m0 = _phy_paper_scenario(CommConfig())
+        faded, m1 = _phy_paper_scenario(
+            CommConfig(fading="rayleigh", doppler_rho=1.0))
+        for a, b in zip(jax.tree.leaves(base.global_params),
+                        jax.tree.leaves(faded.global_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(m0.global_loss) == float(m1.global_loss)
+        assert float(m0.bytes_up) == float(m1.bytes_up)
+
+    def test_rayleigh_run_is_finite_and_reports_energy(self):
+        state, m = _phy_paper_scenario(
+            CommConfig(channel="awgn", snr_db=10.0, fading="rayleigh",
+                       doppler_rho=0.9))
+        for leaf in jax.tree.leaves(state.global_params):
+            assert bool(jnp.isfinite(leaf).all())
+        assert float(m.airtime_s) > 0 and float(m.energy_j) > 0
+        assert np.isfinite(float(m.mean_snr_db))
+
+    def test_fading_evolves_phy_state_in_engine(self):
+        state, _ = _phy_paper_scenario(
+            CommConfig(channel="awgn", fading="rayleigh", doppler_rho=0.5))
+        h2 = (np.asarray(state.phy.h_re) ** 2
+              + np.asarray(state.phy.h_im) ** 2)
+        assert not np.allclose(h2, 1.0)    # gains actually moved
+
+    def test_outage_run_ages_undelivered_workers(self):
+        state, m = _phy_paper_scenario(
+            CommConfig(channel="awgn", snr_db=3.0, fading="rayleigh",
+                       doppler_rho=0.3, outage_snr_db=0.0), rounds_n=4)
+        assert float(m.delivered) <= float(m.selected_count)
+        assert int(np.asarray(state.phy.age).max()) >= 0
+        for leaf in jax.tree.leaves(state.global_params):
+            assert bool(jnp.isfinite(leaf).all())

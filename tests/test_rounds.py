@@ -51,6 +51,34 @@ GOLDEN_B_THETA = [5.66981554e-01, 7.24831879e-01, 6.83676302e-01]
 GOLDEN_B_GLOBAL_LOSS = 7.11177707e-01
 GOLDEN_B_BYTES_UP = 252.0
 
+# golden values for the non-default channel configs, captured at commit
+# 750e995 (the last pre-phy commit): the phy refactor must keep the
+# legacy erasure / awgn / adaptive-tier paths bit-identical.
+GOLDEN_ERA_GLOBAL_W = [0.135449916, 0.226245284, -0.289681226, 0.250264257,
+                       -0.308933437, 0.295656949, -0.259533823, 0.191622138,
+                       0.0407505482, -0.176750511, -0.292056501, 0.303303987,
+                       0.0843151435, 0.26603356, -0.297985822]
+GOLDEN_ERA_GLOBAL_LOSS = 0.73827064037323
+GOLDEN_ERA_DELIVERED = 2.0
+GOLDEN_AWGN_GLOBAL_W = [0.301156342, 0.105007783, -0.281119287, 0.254952878,
+                        -0.34334144, 0.212368816, -0.232611135, 0.255858243,
+                        0.315140545, -0.296375543, -0.0496297143, 0.314203143,
+                        0.0544373989, 0.256068319, -0.354990304]
+GOLDEN_AWGN_GLOBAL_LOSS = 0.7636064291000366
+GOLDEN_ADA_GLOBAL_W = [0.173703074, 0.228680268, -0.288142622, 0.260713965,
+                       -0.310938179, 0.293189913, -0.285233527, 0.179208964,
+                       0.174069017, -0.246297121, -0.240510464, 0.301520228,
+                       0.122098073, 0.270038337, -0.28972277]
+GOLDEN_ADA_GLOBAL_LOSS = 0.7268823385238647
+GOLDEN_ADA_BYTES_UP = 70.0
+GOLDEN_MESH_ERA_GLOBAL_W = [-0.0406506918, 0.353791028, -0.245264471,
+                            -0.222518235, -0.111626387, 0.457579792,
+                            0.0347295441, -0.17836386, 0.128652573,
+                            -0.281817734, 0.425222874, -0.122104369,
+                            -0.219926447, -0.169782877, 0.254639536,
+                            -0.360587358, -0.0199347381, 0.232244834]
+GOLDEN_MESH_ERA_GLOBAL_LOSS = 0.8411996364593506
+
 GOLDEN_F_GLOBAL_W = [-1.40705062e-02, 2.38054156e-01, -1.56107754e-01,
                      -1.07632339e-01, -4.92234156e-02, 2.80290931e-01,
                      -4.26485874e-02, -4.44932096e-02, 7.21600577e-02,
@@ -159,6 +187,56 @@ class TestRefactorEquivalence:
         assert float(info.global_loss) == pytest.approx(
             GOLDEN_B_GLOBAL_LOSS, rel=1e-5)
         assert float(info.bytes_up) == GOLDEN_B_BYTES_UP
+
+    def test_erasure_paper_round_matches_golden(self):
+        """Packet-erasure path through the new phy seam: bit-identical
+        to the pre-phy `erasure_mask` implementation (same ekey
+        bernoulli, survivor-normalized mean)."""
+        state, m = _paper_scenario(
+            comm=CommConfig(channel="erasure", drop_prob=0.4))
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(GOLDEN_ERA_GLOBAL_W,
+                                              np.float32).reshape(5, 3),
+                                   rtol=1e-6, atol=1e-7)
+        assert float(m.global_loss) == pytest.approx(
+            GOLDEN_ERA_GLOBAL_LOSS, rel=1e-6)
+        assert float(m.delivered) == GOLDEN_ERA_DELIVERED
+
+    def test_awgn_paper_round_matches_golden(self):
+        """Analog-aggregation AWGN through the new phy seam: the
+        superposed-signal noise path (shared SNR) is unchanged."""
+        state, m = _paper_scenario(
+            comm=CommConfig(channel="awgn", snr_db=10.0))
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(GOLDEN_AWGN_GLOBAL_W,
+                                              np.float32).reshape(5, 3),
+                                   rtol=1e-6, atol=1e-7)
+        assert float(m.global_loss) == pytest.approx(
+            GOLDEN_AWGN_GLOBAL_LOSS, rel=1e-6)
+
+    def test_adaptive_two_tier_matches_golden(self):
+        """The widened N-tier machinery keeps the legacy two-tier
+        score-ranked default bit-identical (same split boundary, same
+        wire selection, same byte charge)."""
+        state, m = _paper_scenario(
+            comm=CommConfig(compressor="int8", adaptive_bits=True))
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(GOLDEN_ADA_GLOBAL_W,
+                                              np.float32).reshape(5, 3),
+                                   rtol=1e-6, atol=1e-7)
+        assert float(m.global_loss) == pytest.approx(
+            GOLDEN_ADA_GLOBAL_LOSS, rel=1e-6)
+        assert float(m.bytes_up) == GOLDEN_ADA_BYTES_UP
+
+    def test_erasure_mesh_step_matches_golden(self):
+        state, info = _mesh_scenario(
+            comm=CommConfig(channel="erasure", drop_prob=0.4))
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(GOLDEN_MESH_ERA_GLOBAL_W,
+                                              np.float32).reshape(6, 3),
+                                   rtol=1e-6, atol=1e-7)
+        assert float(info.global_loss) == pytest.approx(
+            GOLDEN_MESH_ERA_GLOBAL_LOSS, rel=1e-6)
 
     def test_fedavg_mesh_step_matches_golden(self):
         state, info = _mesh_scenario(fedavg=True)
@@ -344,7 +422,7 @@ class TestAdaptiveBits:
                                   mask, mask)
         ada = budget.round_record(
             CommConfig(compressor="int8", adaptive_bits=True), tree, 8,
-            mask, mask, tier_lo=lo)
+            mask, mask, tier_idx=lo.astype(jnp.int32))
         assert float(ada.bytes_up) < float(uni.bytes_up)
         assert float(ada.compression_ratio) > float(uni.compression_ratio)
 
