@@ -25,6 +25,20 @@ from benchmarks.common import print_table, save_record
 from repro.comm import AGGREGATORS, COMPRESSORS
 from repro.experiments import ExperimentSpec, get_scenario, override
 from repro.experiments import run as run_spec
+from repro.obs.events import NULL, Emitter, new_run_id
+from repro.obs.sinks import JsonlSink, default_obs_dir
+
+# benchmark-level obs stream (--obs): one SweepEvent per swept cell with
+# the accuracy/bytes/energy cumulants, so the §IV-C tables — including
+# accuracy-per-joule — are derivable from event streams alone. Each cell
+# run additionally writes its own per-round stream.
+_EM = NULL
+
+
+def _obs_enable(tag: str) -> None:
+    global _EM
+    rid = new_run_id(f"bench__comm_efficiency__{tag}")
+    _EM = Emitter(rid, JsonlSink(default_obs_dir() / f"{rid}.jsonl"))
 
 SWEEP = [
     ("identity", ("comm.compressor=identity",)),
@@ -87,12 +101,25 @@ def base_spec(*, quick: bool, dataset: str, seed: int, aggregator: str,
                     f"comm.adaptive_bits={adaptive_bits}").validate()
 
 
-def _run_one(spec: ExperimentSpec, *overrides: str) -> dict:
-    r = run_spec(override(spec, *overrides) if overrides else spec,
-                 verbose=False).record
+def _run_one(spec: ExperimentSpec, *overrides: str,
+             cell: str = "cell") -> dict:
+    sp = override(spec, *overrides) if overrides else spec
+    if _EM.active:
+        sp = override(sp, "run.obs.enabled=true")
+    res = run_spec(sp, verbose=False)
+    r = res.record
     r["total_bytes"] = r["total_bytes_up"] + r["total_bytes_down"]
     r["bytes_total"] = [u + d for u, d in zip(r["bytes_up"],
                                               r["bytes_down"])]
+    _EM.sweep_cell(cell, seed=sp.run.seed, final=r["final_acc"],
+                   events=res.events_path,
+                   metrics={"final_acc": r["final_acc"],
+                            "best_acc": r["best_acc"],
+                            "total_bytes": r["total_bytes"],
+                            "total_bytes_up": r["total_bytes_up"],
+                            "total_bytes_down": r["total_bytes_down"],
+                            "total_airtime_s": r["total_airtime_s"],
+                            "total_energy_j": r["total_energy_j"]})
     return r
 
 
@@ -115,7 +142,8 @@ def byzantine_sweep(spec: ExperimentSpec, byzantine: int) -> dict:
     rows = []
     for agg in AGGREGATORS:
         r = _run_one(attack, "algo.algorithm=fedavg",
-                     f"comm.aggregator={agg}")
+                     f"comm.aggregator={agg}",
+                     cell=f"byz{byzantine}/fedavg+{agg}")
         out["runs"][agg] = {"final_acc": r["final_acc"],
                             "best_acc": r["best_acc"], "acc": r["acc"],
                             "total_bytes": r["total_bytes"]}
@@ -124,7 +152,8 @@ def byzantine_sweep(spec: ExperimentSpec, byzantine: int) -> dict:
                      f"{r['total_bytes'] / 2**20:.2f}MiB"])
     # the paper's selection defense, for reference: plain-mean Eq. 7 so
     # the row isolates selection (not selection + robust aggregation)
-    r = _run_one(attack, "algo.algorithm=mdsl", "comm.aggregator=mean")
+    r = _run_one(attack, "algo.algorithm=mdsl", "comm.aggregator=mean",
+                 cell=f"byz{byzantine}/mdsl+mean")
     out["runs"]["mdsl_selection"] = {"final_acc": r["final_acc"],
                                      "best_acc": r["best_acc"],
                                      "acc": r["acc"],
@@ -146,7 +175,8 @@ def phy_sweep(spec: ExperimentSpec) -> dict:
     out = {}
     rows = []
     for name, ovr in PHY_SWEEP:
-        r = _run_one(spec, "algo.algorithm=mdsl", *ovr)
+        r = _run_one(spec, "algo.algorithm=mdsl", *ovr,
+                     cell=f"phy/{name}")
         out[name] = {
             "final_acc": r["final_acc"], "best_acc": r["best_acc"],
             "acc": r["acc"], "total_bytes": r["total_bytes"],
@@ -169,7 +199,10 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
         algorithms: tuple[str, ...] = ("fedavg", "mdsl"),
         aggregator: str = "mean", downlink_compressor: str = "identity",
         adaptive_bits: bool = False, byzantine: int = 2,
-        rounds_override: int | None = None, phy: bool = True) -> dict:
+        rounds_override: int | None = None, phy: bool = True,
+        obs: bool = False) -> dict:
+    if obs:
+        _obs_enable(f"{dataset}__s{seed}")
     base = base_spec(quick=quick, dataset=dataset, seed=seed,
                      aggregator=aggregator,
                      downlink_compressor=downlink_compressor,
@@ -181,7 +214,7 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
     for algo in algorithms:
         for cname, ovr in SWEEP:
             recs[(algo, cname)] = _run_one(base, f"algo.algorithm={algo}",
-                                           *ovr)
+                                           *ovr, cell=f"{algo}+{cname}")
 
     # baselines: dense FedAvg when it ran, else the first algorithm's
     # identity run (run() accepts any algorithm subset)
@@ -263,6 +296,10 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
     if byzantine > 0:
         rec["byzantine_sweep"] = byzantine_sweep(base, byzantine)
     save_record("comm_efficiency", rec)
+    if _EM.active:
+        _EM.run_end(rounds=0, totals={"cells": float(len(recs))})
+        print(f"obs events -> {_EM.path}")
+        _EM.close()
     return rec
 
 
@@ -287,6 +324,9 @@ def main() -> None:
     ap.add_argument("--no-phy", action="store_true",
                     help="skip the accuracy-vs-energy phy sweep "
                          "(5 extra runs over the Rayleigh regimes)")
+    ap.add_argument("--obs", action="store_true",
+                    help="stream per-cell SweepEvents (and per-round "
+                         "run streams) under artifacts/obs/")
     args = ap.parse_args()
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
@@ -294,7 +334,7 @@ def main() -> None:
         aggregator=args.aggregator,
         downlink_compressor=args.downlink_compressor,
         adaptive_bits=args.adaptive_bits, byzantine=args.byzantine,
-        rounds_override=args.rounds, phy=not args.no_phy)
+        rounds_override=args.rounds, phy=not args.no_phy, obs=args.obs)
 
 
 if __name__ == "__main__":

@@ -197,24 +197,26 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
     lr = pso.decayed_lr(cfg.hp, state.round_idx)
 
     # --- LocalUpdate (Algorithm 1 lines 3-4): bests, update, F_{i,t+1}. ---
-    eval_on_dg = lambda p: eval_fn(p, eval_x, eval_y)
-    pre_losses = jax.vmap(eval_on_dg)(state.workers.params)
-    workers = jax.vmap(pso.update_local_best)(state.workers, pre_losses)
+    with rounds.stage_span("LocalUpdate"):
+        eval_on_dg = lambda p: eval_fn(p, eval_x, eval_y)
+        pre_losses = jax.vmap(eval_on_dg)(state.workers.params)
+        workers = jax.vmap(pso.update_local_best)(state.workers, pre_losses)
 
-    prev_params = workers.params
-    local = functools.partial(_local_update, loss_fn=loss_fn,
-                              lr=lr, cfg=cfg, use_pso=use_pso)
-    workers = jax.vmap(
-        lambda s, x, y, k, c: local(s, state.gbest.params, x, y, key=k,
-                                    coeffs=c)
-    )(workers, data_x, data_y, jax.random.split(tkey, C), coeffs)
+        prev_params = workers.params
+        local = functools.partial(_local_update, loss_fn=loss_fn,
+                                  lr=lr, cfg=cfg, use_pso=use_pso)
+        workers = jax.vmap(
+            lambda s, x, y, k, c: local(s, state.gbest.params, x, y, key=k,
+                                        coeffs=c)
+        )(workers, data_x, data_y, jax.random.split(tkey, C), coeffs)
 
-    # Byzantine workers compute adversarial updates (comm/channel.py);
-    # corruption lands in their params so Eq. 6 can see (and reject) it.
-    workers = workers._replace(params=comm_channel.corrupt_local_updates(
-        cfg.comm, prev_params, workers.params, bkey))
+        # Byzantine workers compute adversarial updates (comm/channel.py);
+        # corruption lands in their params so Eq. 6 can see (and reject
+        # it).
+        workers = workers._replace(params=comm_channel.corrupt_local_updates(
+            cfg.comm, prev_params, workers.params, bkey))
 
-    eval_losses = jax.vmap(eval_on_dg)(workers.params)
+        eval_losses = jax.vmap(eval_on_dg)(workers.params)
 
     # --- ScoreSelect (lines 5-6, Eqs. 4-6). ---
     theta, mask, theta_mean = pipe.select(eval_losses, state.eta,
@@ -230,9 +232,10 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
                     qkey=qkey, wkey=wkey, phy=state.phy)
 
     # --- BestTracking (Eq. 10) + next state. ---
-    global_loss = eval_on_dg(out.global_params)
-    gbest = pso.update_global_best(state.gbest, out.global_params,
-                                   global_loss)
+    with rounds.stage_span("BestTracking"):
+        global_loss = eval_on_dg(out.global_params)
+        gbest = pso.update_global_best(state.gbest, out.global_params,
+                                       global_loss)
     next_state = SwarmTrainState(
         workers=workers, global_params=out.global_params, gbest=gbest,
         sel=SelectionState(prev_theta_mean=theta_mean),

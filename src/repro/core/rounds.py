@@ -52,6 +52,7 @@ from repro.comm.budget import CommConfig
 from repro.comm.phy import PhyState
 from repro.core import selection
 from repro.core.selection import SelectionState
+from repro.obs.trace import stage_span
 
 Array = jax.Array
 PyTree = Any
@@ -246,15 +247,20 @@ def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
         snr_db = phy.snr_db
     else:
         snr_db = None
-    wire, residual, tier_idx = uplink_fn(comm, delta, residual, theta, mask,
-                                         qkey, snr_db=snr_db,
-                                         axis_name=axis_name)
-    agg_params, mask_eff = aggregate_fn(comm, global_params, wire, mask,
-                                        wkey, snr_db=snr_db)
-    bcast, ps_residual = downlink_fn(comm, agg_params, global_params,
-                                     ps_residual,
-                                     jax.random.fold_in(qkey,
-                                                        _DOWNLINK_SALT))
+    # stage_span is a shared nullcontext unless an obs tracer is
+    # installed; spans inside a jitted round fire at trace time
+    with stage_span("Uplink"):
+        wire, residual, tier_idx = uplink_fn(comm, delta, residual, theta,
+                                             mask, qkey, snr_db=snr_db,
+                                             axis_name=axis_name)
+    with stage_span("Aggregate"):
+        agg_params, mask_eff = aggregate_fn(comm, global_params, wire, mask,
+                                            wkey, snr_db=snr_db)
+    with stage_span("Downlink"):
+        bcast, ps_residual = downlink_fn(comm, agg_params, global_params,
+                                         ps_residual,
+                                         jax.random.fold_in(
+                                             qkey, _DOWNLINK_SALT))
     rec = comm_budget.round_record(comm, global_params, num_workers, mask,
                                    mask_eff, tier_idx=tier_idx,
                                    snr_db=snr_db)
@@ -347,8 +353,9 @@ class RoundPipeline(NamedTuple):
 
     def select(self, losses: Array, eta: Array, prev_theta_mean: Array
                ) -> tuple[Array, Array, Array]:
-        return self.score_select_fn(self.algorithm, losses, eta, self.tau,
-                                    prev_theta_mean)
+        with stage_span("ScoreSelect"):
+            return self.score_select_fn(self.algorithm, losses, eta,
+                                        self.tau, prev_theta_mean)
 
     def wire(self, *, delta: PyTree, theta: Array, mask: Array,
              global_params: PyTree, residual: PyTree, ps_residual: PyTree,

@@ -163,28 +163,32 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
         eval_one = lambda p: loss_fn(p, eval_batch)
         sq = lambda t: jax.tree.map(lambda x: x[0], t)
         ex = lambda t: jax.tree.map(lambda x: x[None], t)
-        if W == 1:
-            p1, v1 = run_local(sq(state.params), sq(state.velocity),
-                               sq(state.best_params), state.gbest_params,
-                               jax.tree.map(lambda x: x[0], batch),
-                               coeffs=sq(coeffs))
-            new_params, new_vel = ex(p1), ex(v1)
-        else:
-            vmapped = jax.vmap(run_local,
-                               in_axes=(0, 0, 0, None, 0, 0),
-                               spmd_axis_name=_spmd_axis_name(cfg))
-            new_params, new_vel = vmapped(state.params, state.velocity,
-                                          state.best_params,
-                                          state.gbest_params, batch, coeffs)
+        with rounds.stage_span("LocalUpdate"):
+            if W == 1:
+                p1, v1 = run_local(sq(state.params), sq(state.velocity),
+                                   sq(state.best_params),
+                                   state.gbest_params,
+                                   jax.tree.map(lambda x: x[0], batch),
+                                   coeffs=sq(coeffs))
+                new_params, new_vel = ex(p1), ex(v1)
+            else:
+                vmapped = jax.vmap(run_local,
+                                   in_axes=(0, 0, 0, None, 0, 0),
+                                   spmd_axis_name=_spmd_axis_name(cfg))
+                new_params, new_vel = vmapped(state.params, state.velocity,
+                                              state.best_params,
+                                              state.gbest_params, batch,
+                                              coeffs)
 
-        # Byzantine workers' local updates are adversarial (comm/channel):
-        # corruption lands in their params so Eq. 6 can reject them.
-        new_params = comm_channel.corrupt_local_updates(
-            cfg.comm, state.params, new_params, bkey)
-        if W == 1:
-            losses = eval_one(sq(new_params))[None]
-        else:
-            losses = jax.vmap(eval_one)(new_params)
+            # Byzantine workers' local updates are adversarial
+            # (comm/channel): corruption lands in their params so Eq. 6
+            # can reject them.
+            new_params = comm_channel.corrupt_local_updates(
+                cfg.comm, state.params, new_params, bkey)
+            if W == 1:
+                losses = eval_one(sq(new_params))[None]
+            else:
+                losses = jax.vmap(eval_one)(new_params)
 
         # --- ScoreSelect (Eqs. 5-6) ---------------------------------------
         theta, mask, theta_mean = pipe.select(losses, state.eta,
@@ -202,11 +206,12 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
         global_loss = eval_one(out.global_params)
 
         # --- BestTracking (Eqs. 9-10) -------------------------------------
-        best_params, best_loss = rounds.track_local_best(
-            state.best_params, state.best_loss, new_params, losses)
-        gbest_params, gbest_loss = rounds.track_global_best(
-            state.gbest_params, state.gbest_loss, out.global_params,
-            global_loss)
+        with rounds.stage_span("BestTracking"):
+            best_params, best_loss = rounds.track_local_best(
+                state.best_params, state.best_loss, new_params, losses)
+            gbest_params, gbest_loss = rounds.track_global_best(
+                state.gbest_params, state.gbest_loss, out.global_params,
+                global_loss)
 
         next_state = DistSwarmState(
             params=new_params, velocity=new_vel, best_params=best_params,
@@ -242,28 +247,31 @@ def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
         pipe = _pipeline(cfg, "fedavg", state.global_params)
         bkey, qkey, wkey = jax.random.split(key, 3)
         lr = pso.decayed_lr(cfg.hp, state.round_idx)
-        if W == 1:
-            delta = local(state.global_params,
-                          jax.tree.map(lambda x: x[0], batch), lr)
-            deltas = jax.tree.map(lambda x: x[None], delta)
-        else:
-            deltas = jax.vmap(
-                lambda b: local(state.global_params, b, lr),
-                spmd_axis_name=_spmd_axis_name(cfg))(batch)
-        # FedAvg rides the same wire: byzantine deltas, compression with
-        # error feedback, channel — but every worker uploads (mask = 1).
-        zeros = jax.tree.map(jnp.zeros_like, deltas)
-        deltas = comm_channel.corrupt_local_updates(cfg.comm, zeros,
-                                                    deltas, bkey)
-        # real per-worker scores: F_i at w_t + delta_i on the eval batch
-        worker_params = jax.tree.map(lambda g, d: g[None] + d,
-                                     state.global_params, deltas)
-        eval_one = lambda p: loss_fn(p, eval_batch)
-        if W == 1:
-            losses = eval_one(jax.tree.map(lambda x: x[0],
-                                           worker_params))[None]
-        else:
-            losses = jax.vmap(eval_one)(worker_params)
+        with rounds.stage_span("LocalUpdate"):
+            if W == 1:
+                delta = local(state.global_params,
+                              jax.tree.map(lambda x: x[0], batch), lr)
+                deltas = jax.tree.map(lambda x: x[None], delta)
+            else:
+                deltas = jax.vmap(
+                    lambda b: local(state.global_params, b, lr),
+                    spmd_axis_name=_spmd_axis_name(cfg))(batch)
+            # FedAvg rides the same wire: byzantine deltas, compression
+            # with error feedback, channel — but every worker uploads
+            # (mask = 1).
+            zeros = jax.tree.map(jnp.zeros_like, deltas)
+            deltas = comm_channel.corrupt_local_updates(cfg.comm, zeros,
+                                                        deltas, bkey)
+            # real per-worker scores: F_i at w_t + delta_i on the eval
+            # batch
+            worker_params = jax.tree.map(lambda g, d: g[None] + d,
+                                         state.global_params, deltas)
+            eval_one = lambda p: loss_fn(p, eval_batch)
+            if W == 1:
+                losses = eval_one(jax.tree.map(lambda x: x[0],
+                                               worker_params))[None]
+            else:
+                losses = jax.vmap(eval_one)(worker_params)
         theta, mask, _ = pipe.select(losses, state.eta,
                                      state.prev_theta_mean)
 

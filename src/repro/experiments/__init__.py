@@ -22,14 +22,15 @@ Typical use:
 """
 from repro.experiments.registry import (describe_scenarios, get_scenario,
                                         list_scenarios, register_scenario)
-from repro.experiments.runner import (Prepared, RunResult, build,
-                                      default_out, run, sweep)
+from repro.experiments.runner import (SCHEMA_VERSION, Prepared, RunResult,
+                                      build, default_out, load_result, run,
+                                      sweep)
 from repro.experiments.spec import (AlgoSpec, DataSpec, ExperimentSpec,
-                                    ModelSpec, RunSpec, from_dict, override,
-                                    to_dict)
+                                    ModelSpec, ObsConfig, RunSpec,
+                                    from_dict, override, to_dict)
 
 __all__ = ["AlgoSpec", "DataSpec", "ExperimentSpec", "ModelSpec",
-           "Prepared", "RunResult", "RunSpec", "build", "default_out",
-           "describe_scenarios", "from_dict", "get_scenario",
-           "list_scenarios", "override", "register_scenario", "run",
-           "sweep", "to_dict"]
+           "ObsConfig", "Prepared", "RunResult", "RunSpec",
+           "SCHEMA_VERSION", "build", "default_out", "describe_scenarios",
+           "from_dict", "get_scenario", "list_scenarios", "load_result",
+           "override", "register_scenario", "run", "sweep", "to_dict"]

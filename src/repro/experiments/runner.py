@@ -16,7 +16,9 @@ emit byte-identical metrics (modulo timing) on the default path.
 """
 from __future__ import annotations
 
+import contextlib
 import json
+import sys
 import time
 from pathlib import Path
 from typing import Any, Callable, NamedTuple, Optional
@@ -30,8 +32,35 @@ from repro.comm.budget import (dense_bytes, downlink_config,
 from repro.data import partition
 from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
 from repro.experiments.spec import ExperimentSpec, override, to_dict
+from repro.obs import trace as obs_trace
+from repro.obs.events import NULL, Emitter, new_run_id
+from repro.obs.sinks import CsvSink, FanoutSink, JsonlSink, default_obs_dir
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts"
+
+# Artifact format version. 1 = pre-obs {"spec", "metrics"}; 2 adds
+# top-level "schema" and "events" (the run's JSONL stream path, null
+# when obs was disabled). The metrics record itself is unchanged —
+# golden pins compare it field-for-field across versions.
+SCHEMA_VERSION = 2
+
+
+def load_result(path: str | Path) -> dict:
+    """Load a run artifact, failing loudly on unknown schema versions
+    instead of letting downstream scripts KeyError on a shape they were
+    never written for. Returns the raw dict with "schema" normalized
+    (pre-version artifacts are schema 1)."""
+    d = json.loads(Path(path).read_text())
+    schema = d.get("schema", 1)
+    if schema not in (1, 2):
+        raise ValueError(
+            f"{path}: artifact schema {schema!r} is newer than this "
+            f"reader (knows 1..{SCHEMA_VERSION}) — upgrade the repo or "
+            f"re-run the experiment")
+    if not isinstance(d.get("metrics"), dict):
+        raise ValueError(f"{path}: not a run artifact (no metrics dict)")
+    d["schema"] = schema
+    return d
 
 
 def _noniid2_groups(C: int) -> list[tuple[int, float]]:
@@ -86,12 +115,15 @@ class Prepared(NamedTuple):
 
 class RunResult(NamedTuple):
     """A finished run: the spec that produced it + the metrics record
-    (the record is the legacy metrics-JSON dict, unchanged)."""
+    (the record is the legacy metrics-JSON dict, unchanged) + the path
+    of the run's obs event stream (None when obs was disabled)."""
     spec: ExperimentSpec
     record: dict
+    events_path: Optional[str] = None
 
     def to_dict(self) -> dict:
-        return {"spec": to_dict(self.spec), "metrics": self.record}
+        return {"schema": SCHEMA_VERSION, "spec": to_dict(self.spec),
+                "metrics": self.record, "events": self.events_path}
 
     def save(self, path: str | Path) -> Path:
         path = Path(path)
@@ -154,7 +186,14 @@ def _prepare_paper(spec: ExperimentSpec) -> Prepared:
                          "cfg": cfg, "test_accuracy": test_accuracy})
 
 
-def _run_paper(prep: Prepared, verbose: bool) -> dict:
+def _round_window(profiler, t: int):
+    """The per-round profiler window (nullcontext when not profiling)."""
+    return profiler.round(t) if profiler is not None \
+        else contextlib.nullcontext()
+
+
+def _run_paper(prep: Prepared, verbose: bool, em=NULL,
+               profiler=None) -> dict:
     spec, comm = prep.spec, prep.spec.comm
     d, a, r = spec.data, spec.algo, spec.run
     state, key = prep.state, prep.key
@@ -178,32 +217,44 @@ def _run_paper(prep: Prepared, verbose: bool) -> dict:
     metrics = None
     for t in range(r.rounds):
         t0 = time.time()
-        state, metrics, key = prep.step(state, key)
-        acc = float(test_accuracy(state.global_params))
-        record["acc"].append(acc)
-        record["global_loss"].append(float(metrics.global_loss))
-        record["selected"].append(int(metrics.selected_count))
-        record["delivered"].append(int(metrics.delivered_count))
-        record["uploaded_params"].append(float(metrics.uploaded_params))
+        with _round_window(profiler, t):
+            with em.span("Step", round_idx=t):
+                state, metrics, key = prep.step(state, key)
+                if em.active:
+                    # host sync so the Step span covers device time;
+                    # obs-off runs keep the legacy async dispatch
+                    jax.block_until_ready(metrics)
+            with em.span("Eval", round_idx=t):
+                acc = float(test_accuracy(state.global_params))
         up, down = host_round_bytes(
             comm, selected=metrics.selected_count,
             bytes_up_jit=metrics.bytes_up,
             payload_up=record["payload_bytes_per_worker"],
             payload_down=record["downlink_bytes_per_worker"],
             num_workers=d.num_workers)
-        record["bytes_up"].append(up)
-        record["bytes_down"].append(down)
-        record["airtime_s"].append(float(metrics.airtime_s))
-        record["energy_j"].append(float(metrics.energy_j))
-        record["mean_snr_db"].append(float(metrics.mean_snr_db))
-        record["round_time_s"].append(round(time.time() - t0, 2))
+        # ONE row dict feeds both the artifact history and the event
+        # stream, so the JSONL round metrics are bit-equal to the
+        # artifact by construction
+        row = {"acc": acc, "global_loss": float(metrics.global_loss),
+               "selected": int(metrics.selected_count),
+               "delivered": int(metrics.delivered_count),
+               "uploaded_params": float(metrics.uploaded_params),
+               "bytes_up": up, "bytes_down": down,
+               "airtime_s": float(metrics.airtime_s),
+               "energy_j": float(metrics.energy_j),
+               "mean_snr_db": float(metrics.mean_snr_db),
+               "round_time_s": round(time.time() - t0, 2)}
+        for k, v in row.items():
+            record[k].append(v)
+        em.round(t, row)
         if verbose and (t % r.log_every == 0 or t == r.rounds - 1):
-            print(f"[{a.algorithm}/{d.case}/{d.dataset}] "
-                  f"round {t + 1}/{r.rounds} "
-                  f"acc={acc:.3f} loss={float(metrics.global_loss):.4f} "
-                  f"selected={int(metrics.selected_count)}/{d.num_workers} "
-                  f"up={float(metrics.bytes_up) / 2**20:.2f}MiB",
-                  flush=True)
+            em.log(f"[{a.algorithm}/{d.case}/{d.dataset}] "
+                   f"round {t + 1}/{r.rounds} "
+                   f"acc={acc:.3f} loss={row['global_loss']:.4f} "
+                   f"selected={row['selected']}/{d.num_workers} "
+                   f"up={float(metrics.bytes_up) / 2**20:.2f}MiB "
+                   f"air={row['airtime_s']:.3f}s "
+                   f"e={row['energy_j']:.3f}J")
     record["final_acc"] = record["acc"][-1]
     record["best_acc"] = max(record["acc"])
     record["total_uploaded_params"] = float(sum(record["uploaded_params"]))
@@ -273,7 +324,8 @@ def _prepare_mesh(spec: ExperimentSpec) -> Prepared:
                          "params": params})
 
 
-def _run_mesh(prep: Prepared, verbose: bool) -> dict:
+def _run_mesh(prep: Prepared, verbose: bool, em=NULL,
+              profiler=None) -> dict:
     from repro.checkpoint import CheckpointManager
 
     spec = prep.spec
@@ -295,25 +347,35 @@ def _run_mesh(prep: Prepared, verbose: bool) -> dict:
               "energy_j": [], "mean_snr_db": [], "step_time_s": []}
     for i in range(r.rounds):
         t0 = time.time()
-        state, info, key = prep.step(state, key)
+        with _round_window(profiler, i):
+            with em.span("Step", round_idx=i):
+                state, info, key = prep.step(state, key)
+                if em.active:
+                    jax.block_until_ready(info)
         gl = float(info.global_loss)
-        record["global_loss"].append(gl)
-        record["worker_losses"].append(np.asarray(info.losses).tolist())
-        record["selected"].append(float(info.mask.sum()))
-        record["delivered"].append(float(info.delivered))
         up, down = host_round_bytes(
             dcfg.comm, selected=info.mask.sum(), bytes_up_jit=info.bytes_up,
             payload_up=payload, payload_down=down_payload, num_workers=W)
-        record["bytes_up"].append(up)
-        record["bytes_down"].append(down)
-        record["airtime_s"].append(float(info.airtime_s))
-        record["energy_j"].append(float(info.energy_j))
-        record["mean_snr_db"].append(float(info.mean_snr_db))
-        record["step_time_s"].append(round(time.time() - t0, 2))
+        # one row feeds both artifact history and event stream (see
+        # _run_paper) — bit-equal by construction
+        row = {"global_loss": gl,
+               "worker_losses": np.asarray(info.losses).tolist(),
+               "selected": float(info.mask.sum()),
+               "delivered": float(info.delivered),
+               "bytes_up": up, "bytes_down": down,
+               "airtime_s": float(info.airtime_s),
+               "energy_j": float(info.energy_j),
+               "mean_snr_db": float(info.mean_snr_db),
+               "step_time_s": round(time.time() - t0, 2)}
+        for k, v in row.items():
+            record[k].append(v)
+        em.round(i, row)
         if verbose:
-            print(f"[mesh/{m.name}] step {i + 1}/{r.rounds} "
-                  f"global_loss={gl:.4f} "
-                  f"selected={int(info.mask.sum())}/{W}", flush=True)
+            em.log(f"[mesh/{m.name}] step {i + 1}/{r.rounds} "
+                   f"global_loss={gl:.4f} "
+                   f"selected={int(info.mask.sum())}/{W} "
+                   f"air={row['airtime_s']:.3f}s "
+                   f"e={row['energy_j']:.3f}J")
         if mgr is not None:
             mgr.save(i, state.global_params, metadata={"arch": m.name})
     if mgr is not None:
@@ -335,13 +397,75 @@ def build(spec: ExperimentSpec) -> Prepared:
             else _prepare_mesh(spec))
 
 
+def _obs_emitter(spec: ExperimentSpec, engine: str):
+    """RunSpec.obs -> an emitter (NULL when disabled). The stream lands
+    under `obs.dir` (default artifacts/obs/) as <run_id>.jsonl, plus a
+    per-round CSV next to it when `obs.csv` is set."""
+    o = spec.run.obs
+    if not o.enabled:
+        return NULL
+    run_id = new_run_id(f"{spec.name or engine}__s{spec.run.seed}")
+    base = Path(o.dir) if o.dir else default_obs_dir()
+    sink = JsonlSink(base / f"{run_id}.jsonl")
+    if o.csv:
+        sink = FanoutSink(sink, CsvSink(base / f"{run_id}.csv"))
+    return Emitter(run_id, sink)
+
+
+def _run_totals(record: dict) -> dict:
+    """Cumulants for the RunEnd event, read off the finished record."""
+    totals = {}
+    for k in ("final_acc", "best_acc", "total_bytes_up",
+              "total_bytes_down", "total_airtime_s", "total_energy_j"):
+        if k in record:
+            totals[k] = record[k]
+    if "final_acc" not in totals and record.get("global_loss"):
+        totals["final_loss"] = record["global_loss"][-1]
+    return totals
+
+
 def run(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
     """Execute a spec end-to-end: the single front door subsuming the
-    legacy `run_paper_experiment` / `run_mesh_training` drivers."""
+    legacy `run_paper_experiment` / `run_mesh_training` drivers.
+
+    With `run.obs.enabled` the whole run streams typed events (see
+    repro.obs): run_start with the full spec, a per-round RoundEvent
+    bit-equal to the artifact history, per-stage spans (installed BEFORE
+    the first step so the RoundPipeline stages are timed during the
+    round-0 jit trace), optional jax.profiler round windows, and a
+    run_end with cumulative totals."""
     prep = build(spec)
-    record = (_run_paper(prep, verbose) if spec.model.kind == "paper"
-              else _run_mesh(prep, verbose))
-    return RunResult(spec=prep.spec, record=record)
+    spec = prep.spec
+    engine = "paper" if spec.model.kind == "paper" else "mesh"
+    em = _obs_emitter(spec, engine)
+    tracer = profiler = None
+    if em.active:
+        o = spec.run.obs
+        em.run_start(scenario=spec.name, seed=spec.run.seed, engine=engine,
+                     num_workers=spec.data.num_workers,
+                     rounds=spec.run.rounds, n_params=prep.n_params,
+                     spec=to_dict(spec))
+        if o.stage_spans:
+            tracer = obs_trace.StageTracer(em, phase="trace")
+        if o.profile_dir:
+            profiler = obs_trace.RoundProfiler(
+                o.profile_dir, start=min(1, spec.run.rounds - 1),
+                count=o.profile_rounds, emitter=em)
+    try:
+        with obs_trace.activated(tracer):
+            record = (_run_paper(prep, verbose, em, profiler)
+                      if engine == "paper"
+                      else _run_mesh(prep, verbose, em, profiler))
+    except BaseException:
+        if em.active:
+            if profiler is not None:
+                profiler.stop()
+            em.run_end(rounds=0, status="error")
+            em.close()
+        raise
+    em.run_end(rounds=spec.run.rounds, totals=_run_totals(record))
+    em.close()
+    return RunResult(spec=spec, record=record, events_path=em.path)
 
 
 def default_out(spec: ExperimentSpec) -> Path:
@@ -364,18 +488,31 @@ def default_out(spec: ExperimentSpec) -> Path:
 def _sweep_task(spec_dict: dict, path: str, verbose: bool) -> dict:
     """One (scenario, seed) cell, spec passed as its JSON dict so the
     task pickles cleanly into a ProcessPoolExecutor worker. Runs the
-    spec, saves its artifact, returns the metrics record."""
+    spec, saves its artifact, returns {record, events, wall_s}. Obs
+    streams are process-local by design (run ids embed the pid), so a
+    pool cell needs no cross-process file coordination."""
     from repro.experiments.spec import from_dict
+    t0 = time.time()
     res = run(from_dict(spec_dict), verbose=verbose)
     res.save(path)
-    return res.record
+    return {"record": res.record, "events": res.events_path,
+            "wall_s": time.time() - t0}
 
 
-def _sweep_report(spec: ExperimentSpec, record: dict, path: Path) -> None:
-    name = spec.name or f"{spec.algo.algorithm}/{spec.data.case}"
+def _cell_name(spec: ExperimentSpec) -> str:
+    return spec.name or f"{spec.algo.algorithm}/{spec.data.case}"
+
+
+def _sweep_report(spec: ExperimentSpec, record: dict, path: Path,
+                  wall_s: float, events: Optional[str]) -> None:
+    """Per-cell stderr line: headline metric, wall-time, artifact, and
+    (when obs is on) the cell's event stream — grid runs stay
+    attributable without re-opening artifacts."""
     final = record.get("final_acc", record["global_loss"][-1])
-    print(f"[sweep] {name} s{spec.run.seed}: {final:.4f} -> {path}",
-          flush=True)
+    ev = f" events={events}" if events else ""
+    print(f"[sweep] {_cell_name(spec)} s{spec.run.seed}: {final:.4f} "
+          f"wall={wall_s:.1f}s -> {path}{ev}",
+          file=sys.stderr, flush=True)
 
 
 def sweep(specs, seeds=(0,), out_dir: str | Path | None = None,
@@ -399,32 +536,60 @@ def sweep(specs, seeds=(0,), out_dir: str | Path | None = None,
                 path = Path(out_dir) / path.name
             cells.append((s, path))
 
-    results = []
-    if jobs <= 1:
-        for s, path in cells:
-            res = run(s, verbose=verbose)
-            res.save(path)
-            if not verbose:
-                _sweep_report(s, res.record, path)
-            results.append(res)
+    # sweep-level summary stream: one SweepEvent per finished cell (each
+    # cell also writes its own run stream) — the grid is derivable from
+    # streams alone
+    sem = NULL
+    if cells and cells[0][0].run.obs.enabled:
+        first = cells[0][0]
+        base = (Path(first.run.obs.dir) if first.run.obs.dir
+                else default_obs_dir())
+        rid = new_run_id(f"sweep__{first.name or 'grid'}")
+        sem = Emitter(rid, JsonlSink(base / f"{rid}.jsonl"))
+
+    def finish_cell(s, path, record, events, wall_s, results):
+        sem.sweep_cell(_cell_name(s), seed=s.run.seed,
+                       final=record.get("final_acc",
+                                        record["global_loss"][-1]),
+                       wall_s=round(wall_s, 3), artifact=str(path),
+                       events=events)
+        if not verbose:
+            _sweep_report(s, record, path, wall_s, events)
+        results.append(RunResult(spec=s, record=record,
+                                 events_path=events))
+
+    results: list[RunResult] = []
+    try:
+        if jobs <= 1:
+            for s, path in cells:
+                t0 = time.time()
+                res = run(s, verbose=verbose)
+                res.save(path)
+                finish_cell(s, path, res.record, res.events_path,
+                            time.time() - t0, results)
+            return results
+
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor
+
+        # fork would copy this process's initialized XLA runtime into
+        # the workers (thread-lock deadlocks); spawn gives each cell a
+        # clean interpreter
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as ex:
+            futs = [ex.submit(_sweep_task, to_dict(s), str(path), verbose)
+                    for s, path in cells]
+            for (s, path), fut in zip(cells, futs):
+                out = fut.result()
+                finish_cell(s, path, out["record"], out["events"],
+                            out["wall_s"], results)
         return results
-
-    import multiprocessing
-    from concurrent.futures import ProcessPoolExecutor
-
-    # fork would copy this process's initialized XLA runtime into the
-    # workers (thread-lock deadlocks); spawn gives each cell a clean
-    # interpreter
-    ctx = multiprocessing.get_context("spawn")
-    with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as ex:
-        futs = [ex.submit(_sweep_task, to_dict(s), str(path), verbose)
-                for s, path in cells]
-        for (s, path), fut in zip(cells, futs):
-            record = fut.result()
-            if not verbose:
-                _sweep_report(s, record, path)
-            results.append(RunResult(spec=s, record=record))
-    return results
+    finally:
+        if sem.active:
+            sem.run_end(rounds=len(results),
+                        status="ok" if len(results) == len(cells)
+                        else "error")
+            sem.close()
 
 
 def spec_from_paper_kwargs(algorithm="mdsl", case="noniid1",
@@ -474,6 +639,6 @@ def spec_from_mesh_kwargs(arch, steps=5, reduced=True, seq_len=128,
 
 
 # dataclasses imported for callers composing specs around the runner
-__all__ = ["ARTIFACTS", "Prepared", "RunResult", "build", "run", "sweep",
-           "default_out", "make_case_data", "spec_from_paper_kwargs",
-           "spec_from_mesh_kwargs"]
+__all__ = ["ARTIFACTS", "SCHEMA_VERSION", "Prepared", "RunResult", "build",
+           "load_result", "run", "sweep", "default_out", "make_case_data",
+           "spec_from_paper_kwargs", "spec_from_mesh_kwargs"]

@@ -84,6 +84,19 @@ class AlgoSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """The telemetry bus (repro.obs). Disabled by default: a disabled
+    run pays only no-op emitter calls and stays bit-identical to the
+    pre-obs goldens."""
+    enabled: bool = False
+    dir: Optional[str] = None            # stream dir (None = artifacts/obs)
+    csv: bool = False                    # also write per-round CSV rows
+    stage_spans: bool = True             # trace RoundPipeline stages
+    profile_dir: Optional[str] = None    # jax.profiler trace output dir
+    profile_rounds: int = 3              # rounds captured per trace window
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """How long, how seeded, where the metrics land."""
     rounds: int = 20                     # communication rounds / mesh steps
@@ -91,6 +104,7 @@ class RunSpec:
     log_every: int = 1                   # verbose print cadence (rounds)
     out: Optional[str] = None            # metrics JSON path (None = default)
     ckpt_dir: Optional[str] = None       # mesh checkpoint directory
+    obs: ObsConfig = ObsConfig()         # telemetry bus wiring
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,7 +152,8 @@ class ExperimentSpec:
                          ("algo.local_epochs", a.local_epochs),
                          ("algo.local_steps", a.local_steps),
                          ("algo.batch_size", a.batch_size),
-                         ("run.rounds", r.rounds)]:
+                         ("run.rounds", r.rounds),
+                         ("run.obs.profile_rounds", r.obs.profile_rounds)]:
             if v < 1:
                 raise ValueError(f"{fname} must be >= 1, got {v}")
         if not 0.0 <= a.tau <= 1.0:
@@ -168,7 +183,7 @@ class ExperimentSpec:
 
 # struct classes reachable from an ExperimentSpec, keyed for from_dict
 _STRUCTS = (ExperimentSpec, DataSpec, ModelSpec, AlgoSpec, RunSpec,
-            CommConfig, PsoHyperParams)
+            ObsConfig, CommConfig, PsoHyperParams)
 
 
 def _is_namedtuple(obj: Any) -> bool:

@@ -36,6 +36,7 @@ def quantize_pack(x: jax.Array, seed: jax.Array, *, bits: int = 8,
     on CPU)."""
     if interpret is None:
         interpret = runtime.interpret_default()
+    runtime.note_dispatch("quant_pack", interpret, bits=bits)
     x2 = _pad_2d(x.reshape(-1).astype(jnp.float32))
     if interpret:
         return quant_pack_ref(x2, seed, bits=bits)

@@ -5,3 +5,13 @@ import jax
 def interpret_default() -> bool:
     """Pallas interpret mode: True on CPU (validation), False on TPU."""
     return jax.default_backend() != "tpu"
+
+
+def note_dispatch(name: str, interpret: bool, **info) -> None:
+    """Report a kernel dispatch decision (compiled pallas vs
+    interpret/ref fallback) to the obs bus. No-op unless a run has a
+    StageTracer installed (repro.obs.trace), so kernels can call this
+    unconditionally."""
+    from repro.obs.trace import note_kernel
+    note_kernel(name, backend=jax.default_backend(), interpret=interpret,
+                **info)

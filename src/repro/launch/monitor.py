@@ -1,0 +1,7 @@
+"""`python -m repro.launch.monitor <run.jsonl> [--follow]` — the live
+run dashboard. Thin alias for repro.obs.monitor so the launch package
+stays the single CLI front door."""
+from repro.obs.monitor import main
+
+if __name__ == "__main__":
+    main()

@@ -112,6 +112,22 @@ _MESH_FLAGS = [
 ]
 
 
+def _obs_overrides(args: argparse.Namespace) -> list[str]:
+    """--obs / --obs-dir / --profile-dir -> run.obs.* overrides (any of
+    them switches the telemetry bus on). getattr-safe so programmatic
+    Namespace callers without the flags keep working."""
+    ovr = []
+    obs_dir = getattr(args, "obs_dir", None)
+    profile_dir = getattr(args, "profile_dir", None)
+    if getattr(args, "obs", False) or obs_dir or profile_dir:
+        ovr.append("run.obs.enabled=true")
+    if obs_dir:
+        ovr.append(f"run.obs.dir={obs_dir}")
+    if profile_dir:
+        ovr.append(f"run.obs.profile_dir={profile_dir}")
+    return ovr
+
+
 def build_spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
     """scenario preset (or mode default) -> legacy flags -> --set."""
     if args.scenario:
@@ -141,6 +157,8 @@ def build_spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         spec = override(spec, "comm.error_feedback=false")
     if args.adaptive_bits:
         spec = override(spec, "comm.adaptive_bits=true")
+    for assignment in _obs_overrides(args):
+        spec = override(spec, assignment)
     for assignment in args.overrides:
         spec = override(spec, assignment)
     return spec.validate()
@@ -169,6 +187,8 @@ def build_sweep_specs(args: argparse.Namespace) -> list[ExperimentSpec]:
             raise ValueError(f"--sweep-axis must look like "
                              f"key=v1,v2,..., got {axis!r}")
         specs = [override(s, f"{path}={v}") for s in specs for v in values]
+    for assignment in _obs_overrides(args):
+        specs = [override(s, assignment) for s in specs]
     return [s.validate() for s in specs]
 
 
@@ -224,6 +244,17 @@ def main() -> None:
     ap.add_argument("--arch", default=None)
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
+    # observability (repro.obs; any of these enables the event stream)
+    ap.add_argument("--obs", action="store_true",
+                    help="stream typed telemetry events to a JSONL file "
+                         "under artifacts/obs/ (tail it with "
+                         "python -m repro.launch.monitor --follow)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="event stream directory (implies --obs)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace for a window of "
+                         "rounds into this dir (implies --obs; load in "
+                         "TensorBoard)")
     # sweep mode: --sweep S1,S2 [--sweep-axis k=v1,v2]... [--seeds ..]
     ap.add_argument("--sweep", default=None, metavar="SCENARIOS",
                     help="comma-separated scenario names to sweep "
@@ -282,6 +313,10 @@ def main() -> None:
     out = default_out(spec)
     result.save(out)
     print(f"wrote {out}")
+    if result.events_path:
+        print(f"events {result.events_path}\n"
+              f"  view: python -m repro.launch.monitor "
+              f"{result.events_path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""repro.obs — structured telemetry bus.
+
+Typed events (events), composable sinks + stream readers (sinks),
+per-stage span tracing and jax.profiler windows (trace), and the
+terminal run monitor (monitor). See docs/obs.md for the event schema.
+"""
+from repro.obs.events import (EVENT_SCHEMA, EVENT_TYPES, Emitter, Event,
+                              KernelEvent, LogEvent, NULL, NullEmitter,
+                              RoundEvent, RunClock, RunEnd, RunStart,
+                              StageEvent, SweepEvent, new_run_id, parse,
+                              parse_line)
+from repro.obs.sinks import (CsvSink, FanoutSink, JsonlSink,
+                             RingBufferSink, Sink, default_obs_dir,
+                             follow_jsonl, merge_streams, read_events)
+from repro.obs.trace import (RoundProfiler, StageTracer, activated,
+                             current, install, note_kernel, stage_span,
+                             uninstall)
+
+__all__ = [
+    "EVENT_SCHEMA", "EVENT_TYPES", "Emitter", "Event", "KernelEvent",
+    "LogEvent", "NULL", "NullEmitter", "RoundEvent", "RunClock",
+    "RunEnd", "RunStart", "StageEvent", "SweepEvent", "new_run_id",
+    "parse", "parse_line",
+    "CsvSink", "FanoutSink", "JsonlSink", "RingBufferSink", "Sink",
+    "default_obs_dir", "follow_jsonl", "merge_streams", "read_events",
+    "RoundProfiler", "StageTracer", "activated", "current", "install",
+    "note_kernel", "stage_span", "uninstall",
+]
