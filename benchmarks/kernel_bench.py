@@ -7,18 +7,32 @@ For each kernel we report, per shape:
   * the kernel's VMEM working set per grid step (must fit ~16 MiB v5e
     VMEM given the BlockSpec tiling),
   * analytic HBM traffic / FLOPs -> the kernel's v5e roofline bound.
+
+`--json` additionally writes BENCH_wire_path.json at the repo root: the
+pinned fused-vs-unfused wire-path numbers (quantize+pack+EF and
+dequant+masked-aggregate vs the legacy compress -> decode -> aggregate
+chain, per bits x fleet size), asserting bit-identical aggregates and
+recording both measured wall-clock (jnp ref implementations on CPU;
+compiled pallas where a TPU is attached) and the analytic HBM
+bytes-moved reduction the fusion buys. `--quick` shrinks the sweep for
+CI. See docs/kernels.md for how to read the artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import print_table, save_record
+from benchmarks.common import ROOT, print_table, save_record
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
 KEY = jax.random.PRNGKey(0)
+
+WIRE_JSON = ROOT / "BENCH_wire_path.json"
 
 
 def _time(fn, reps=3):
@@ -140,17 +154,175 @@ def bench_rglru() -> list[list]:
     return rows
 
 
-def run() -> dict:
+def bench_wire_kernels(quick: bool = False) -> list[list]:
+    """Interpret-mode correctness + roofline rows for the fused
+    wire-path pair (quant_pack_ef, wire_agg)."""
+    from repro.kernels.quant_pack import quant_pack_ef_2d, quant_pack_ef_ref
+    from repro.kernels.quant_pack.quant_pack import BLOCK_ROWS
+    from repro.kernels.wire_agg import wire_agg_2d, wire_agg_ref
+    rows = []
+    n, C = (1 << 15, 4) if quick else (1 << 16, 8)
+    x = jax.random.normal(KEY, (n // 128, 128))
+    r = 0.05 * jax.random.normal(jax.random.fold_in(KEY, 1), (n // 128, 128))
+    seed = jnp.int32(7)
+    for bits in (8, 4):
+        pk, sk, rk = quant_pack_ef_2d(x, r, seed, bits=bits, interpret=True)
+        pr, sr, rr = quant_pack_ef_ref(x, r, seed, bits=bits)
+        err = max(float(jnp.abs(pk.astype(jnp.int32)
+                                - pr.astype(jnp.int32)).max()),
+                  float(jnp.abs(sk - sr).max()),
+                  float(jnp.abs(rk - rr).max()))
+        # read delta+residual (8B/elem), write packed + new residual
+        hbm = 8 * n + n * bits // 8 + 4 * n
+        vmem = int((4 + 4 + bits / 8 + 4) * BLOCK_ROWS * 128)
+        t_ref = _time(lambda: quant_pack_ef_ref(x, r, seed, bits=bits))
+        rows.append([f"quant_pack_ef(int{bits})", f"n={n}", f"{err:.2e}",
+                     f"{vmem / 2**10:.0f}KiB",
+                     f"{hbm / HBM_BW * 1e6:.1f}us (mem)",
+                     f"{t_ref * 1e3:.2f}ms"])
+
+    from repro.kernels.quant_pack import quant_pack_ref
+    mask = (jnp.arange(C) % 4 != 3).astype(jnp.float32).reshape(C, 1)
+    w1 = jnp.ones((C, 1), jnp.float32)
+    for bits in (8, 4):
+        xs = jax.random.normal(jax.random.fold_in(KEY, 2), (C, n // 128,
+                                                            128))
+        pcs = [quant_pack_ref(xs[c], jnp.int32(c + 1), bits=bits)
+               for c in range(C)]
+        packed = jnp.stack([p for p, _ in pcs])
+        scales = jnp.stack([s for _, s in pcs])
+        for agg in (("mean",) if quick else ("mean", "median")):
+            a_k = wire_agg_2d(packed, scales, mask, w1, bits=bits,
+                              aggregator=agg, interpret=True)
+            ref_fn = jax.jit(lambda p, s, m, w: wire_agg_ref(
+                p, s, m, w, bits=bits, aggregator=agg))
+            a_r = ref_fn(packed, scales, mask, w1)
+            err = float(jnp.abs(a_k - a_r).max())
+            hbm = C * (n * bits // 8) + 4 * n   # read C packed, write f32
+            vmem = int(C * BLOCK_ROWS * 128 * (bits / 8 + 4)
+                       + BLOCK_ROWS * 128 * 4)
+            t_ref = _time(lambda: ref_fn(packed, scales, mask, w1))
+            rows.append([f"wire_agg(int{bits},{agg})", f"C={C} n={n}",
+                         f"{err:.2e}", f"{vmem / 2**10:.0f}KiB",
+                         f"{hbm / HBM_BW * 1e6:.1f}us (mem)",
+                         f"{t_ref * 1e3:.2f}ms"])
+    return rows
+
+
+def _wire_path_cell(bits: int, C: int, n: int) -> dict:
+    """One pinned wire-path cell: the fused two-pass route vs the legacy
+    unfused compress -> decode -> EF-subtract -> aggregate chain, both
+    as jitted jnp implementations (what actually runs on this CPU
+    container; on TPU the same call sites dispatch to compiled pallas).
+    Asserts bit-identical aggregate + residual, times both, and records
+    the analytic HBM bytes each route moves on TPU."""
+    from repro.kernels.quant_pack import (dequant_unpack_ref,
+                                          quant_pack_ef_ref, quant_pack_ref)
+    from repro.kernels.wire_agg import wire_agg_ref
+    rows_2d = n // 128
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, bits * 100 + C))
+    delta = jax.random.normal(k1, (C, rows_2d, 128))
+    residual = 0.05 * jax.random.normal(k2, (C, rows_2d, 128))
+    seeds = jnp.arange(C, dtype=jnp.int32) + 11
+    mask = (jnp.arange(C) % 4 != 3).astype(jnp.float32)
+
+    @jax.jit
+    def unfused(delta, residual, mask, seeds):
+        def one(x, r, s):
+            p, sc = quant_pack_ref(x + r, s, bits=bits)
+            wire = dequant_unpack_ref(p, sc, bits=bits)
+            return wire, (x + r) - wire
+
+        wire, res = jax.vmap(one)(delta, residual, seeds)
+        m = mask[:, None, None]
+        agg = (m * wire).sum(axis=0) / jnp.maximum(mask.sum(), 1.0)
+        return agg, res
+
+    @jax.jit
+    def fused(delta, residual, mask, seeds):
+        p, sc, res = jax.vmap(
+            lambda x, r, s: quant_pack_ef_ref(x, r, s, bits=bits))(
+                delta, residual, seeds)
+        agg = wire_agg_ref(p, sc, mask.reshape(C, 1),
+                           jnp.ones((C, 1), jnp.float32), bits=bits)
+        return agg, res
+
+    agg_u, res_u = unfused(delta, residual, mask, seeds)
+    agg_f, res_f = fused(delta, residual, mask, seeds)
+    bit_identical = bool(np.array_equal(np.asarray(agg_u), np.asarray(agg_f))
+                         and np.array_equal(np.asarray(res_u),
+                                            np.asarray(res_f)))
+    t_u = _time(lambda: unfused(delta, residual, mask, seeds))
+    t_f = _time(lambda: fused(delta, residual, mask, seeds))
+    # analytic HBM bytes per leaf-round (see docs/kernels.md):
+    # unfused = EF-add 12n + pack 4n + b n/8 + decode b n/8 + 4n +
+    #           EF-subtract 12n per worker, + aggregate C*4n read + 4n
+    # fused   = one 8n read + b n/8 + 4n write per worker, + aggregate
+    #           C * b n/8 read + 4n
+    hbm_u = C * (36 * n + bits * n // 4) + 4 * n
+    hbm_f = C * (12 * n + bits * n // 4) + 4 * n
+    return {"bits": bits, "workers": C, "n": n, "aggregator": "mean",
+            "t_unfused_ms": round(t_u * 1e3, 3),
+            "t_fused_ms": round(t_f * 1e3, 3),
+            "speedup": round(t_u / t_f, 3),
+            "hbm_unfused_bytes": hbm_u, "hbm_fused_bytes": hbm_f,
+            "hbm_reduction": round(hbm_u / hbm_f, 3),
+            "bit_identical": bit_identical}
+
+
+def bench_wire_path(quick: bool = False) -> dict:
+    """The pinned perf artifact: fused vs unfused wire path per
+    bits x fleet size. Returns the BENCH_wire_path.json record."""
+    n = (1 << 16) if quick else (1 << 19)
+    fleets = (4, 8) if quick else (4, 16, 32)
+    cells = [_wire_path_cell(bits, C, n)
+             for bits in (8, 4) for C in fleets]
+    rec = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "mode": "jnp-ref",   # CPU: both routes measured as jitted jnp;
+        #                      a TPU run times compiled pallas instead
+        "quick": quick,
+        "hbm_model": ("bytes per leaf-round: unfused C*(36n + b*n/4) + 4n"
+                      " vs fused C*(12n + b*n/4) + 4n"),
+        "rows": cells,
+    }
+    print_table(
+        ["bits", "C", "n", "t_unfused", "t_fused", "speedup", "HBM x",
+         "bit-identical"],
+        [[c["bits"], c["workers"], c["n"], f"{c['t_unfused_ms']:.1f}ms",
+          f"{c['t_fused_ms']:.1f}ms", f"{c['speedup']:.2f}x",
+          f"{c['hbm_reduction']:.2f}x", c["bit_identical"]]
+         for c in cells],
+        "Wire path — fused (quant_pack_ef + wire_agg) vs unfused jnp")
+    return rec
+
+
+def run(quick: bool = False, write_json: bool = False) -> dict:
     rows = (bench_pso_update() + bench_flash_attention() + bench_rglru()
-            + bench_quant_pack())
+            + bench_quant_pack() + bench_wire_kernels(quick))
     print_table(["kernel", "shape", "max|err|", "VMEM/step", "v5e bound",
                  "CPU ref time"], rows,
                 "Pallas kernels — interpret-mode correctness + roofline")
     bad = [r for r in rows if float(r[2]) > 1e-3]
-    rec = {"rows": rows, "all_correct": not bad}
+    wire = bench_wire_path(quick)
+    rec = {"rows": rows, "all_correct": not bad, "wire_path": wire}
     save_record("kernel_bench", rec)
+    if write_json:
+        WIRE_JSON.write_text(json.dumps(wire, indent=1))
+        print(f"wrote {WIRE_JSON}")
     return rec
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / fewer cells (CI)")
+    ap.add_argument("--json", action="store_true",
+                    help=f"write the pinned wire-path record to {WIRE_JSON}")
+    args = ap.parse_args()
+    run(quick=args.quick, write_json=args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

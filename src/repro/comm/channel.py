@@ -37,8 +37,10 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import compress as comm_compress
 from repro.comm import phy as comm_phy
 from repro.comm.budget import CommConfig
+from repro.kernels.wire_agg import wire_aggregate
 
 Array = jax.Array
 PyTree = Any
@@ -116,6 +118,34 @@ def receive(cfg: CommConfig, global_params: PyTree, wire_deltas: PyTree,
             s = s + sigma * jax.random.normal(jax.random.fold_in(nkey, i),
                                               s.shape, jnp.float32)
         out.append((g + s / denom).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out), mask_eff
+
+
+def receive_packed(cfg: CommConfig, global_params: PyTree,
+                   wire: "comm_compress.PackedWire", mask: Array,
+                   key: Array, snr_db: Optional[Array] = None,
+                   weights: Optional[Array] = None
+                   ) -> tuple[PyTree, Array]:
+    """Fused-wire sibling of `receive`: the PS decodes C *packed*
+    payloads (stacked PackedWire from `compress_with_ef_packed`)
+    straight into the Eq.-7 aggregate via `kernels.wire_agg`, never
+    materializing the C dense reconstructions.
+
+    Only reachable for `compress.packed_wire_eligible` configs (no AWGN
+    value distortion); delivery — packet erasure composed with SNR
+    outage — consumes the same ekey split as `receive`, so survivor
+    masks and therefore aggregates are bit-identical to the legacy
+    dense route (asserted in tests/test_wire_kernels.py)."""
+    ekey, _nkey = jax.random.split(key)   # same split discipline as receive
+    mask_eff = comm_phy.delivery_mask(cfg, mask, ekey, snr_db=snr_db)
+    bits = comm_compress.quant_bits(cfg)
+    g_leaves, treedef = jax.tree.flatten(global_params)
+    out = []
+    for g, p, s in zip(g_leaves, wire.packed, wire.scales):
+        agg = wire_aggregate(p, s, mask_eff, shape=g.shape, bits=bits,
+                             aggregator=cfg.aggregator,
+                             trim_ratio=cfg.trim_ratio, weights=weights)
+        out.append((g + agg).astype(g.dtype))
     return jax.tree.unflatten(treedef, out), mask_eff
 
 

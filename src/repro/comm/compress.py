@@ -23,16 +23,18 @@ are only advanced for workers whose upload was actually attempted
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.comm.budget import CommConfig, topk_count
-from repro.kernels.quant_pack import quant_dequant
+from repro.kernels.quant_pack import quant_dequant, quantize_pack_ef
 
 Array = jax.Array
 PyTree = Any
+
+_QUANT_BITS = {"int8": 8, "int4": 4}
 
 
 def _topk_leaf(x: Array, k: int) -> Array:
@@ -82,6 +84,71 @@ def compress_with_ef(cfg: CommConfig, delta: PyTree, residual: PyTree,
     else:
         new_residual = jax.tree.map(jnp.zeros_like, residual)
     return wire, new_residual
+
+
+class PackedWire(NamedTuple):
+    """One worker's quantized uplink in actual wire format: per-leaf
+    packed integer planes + per-block f32 scales, tuples aligned with
+    the delta treedef's flattened leaves. A pytree — the engines vmap it
+    over workers, stacking each plane to (C, ...) for the PS-side fused
+    decode+aggregate (`channel.receive_packed`)."""
+    packed: tuple
+    scales: tuple
+
+
+def quant_bits(cfg: CommConfig) -> Optional[int]:
+    """Wire bit width of a quantizing compressor (None otherwise)."""
+    return _QUANT_BITS.get(cfg.compressor)
+
+
+def packed_wire_eligible(cfg: CommConfig, tree: PyTree) -> bool:
+    """True when the fused wire-format route applies: quantized uplink
+    (int8/int4) at one fleet-wide tier, a link that never perturbs
+    payload *values* (no AWGN — erasure/outage only gate delivery, which
+    the packed route handles via the mask), and f32 leaves (the fused
+    kernels produce f32 residuals/aggregates; mixed-precision models
+    keep the dense route's per-leaf astype semantics). Static under jit:
+    depends only on the config and leaf dtypes."""
+    from repro.comm.phy import link_model
+    if quant_bits(cfg) is None or cfg.adaptive_bits:
+        return False
+    if link_model(cfg).awgn:
+        return False
+    return all(jnp.dtype(x.dtype) == jnp.float32
+               for x in jax.tree.leaves(tree))
+
+
+def compress_with_ef_packed(cfg: CommConfig, delta: PyTree, residual: PyTree,
+                            key: Array) -> tuple[PackedWire, PyTree]:
+    """Fused-wire sibling of `compress_with_ef` for one worker:
+    quantize + pack + error-feedback update in one kernel pass per leaf
+    (`kernels.quant_pack.quantize_pack_ef`), returning the payload in
+    wire format instead of the dense decode. Per-leaf seeds, packed
+    bits, and scales are bit-identical to the legacy compress ->
+    dequant chain (both see the same delta + residual values — in
+    wire_round delta is a stage input, so no caller op can FMA-fuse
+    into one route's EF accumulate only); the new residual agrees up
+    to XLA's FMA contraction of the final subtract, which the legacy
+    route performs at leaf shape and the fused pass at the padded
+    block shape (tests/test_wire_kernels.py pins both).
+
+    Only called for `packed_wire_eligible` configs. Returns
+    (PackedWire, new_residual)."""
+    bits = quant_bits(cfg)
+    leaves, treedef = jax.tree.flatten(delta)
+    res_leaves = jax.tree.leaves(residual)
+    packed, scales, new_res = [], [], []
+    for i, (x, r) in enumerate(zip(leaves, res_leaves)):
+        # same per-leaf seed stream as compress(): fold_in(key, leaf i)
+        seed = jax.random.randint(jax.random.fold_in(key, i), (),
+                                  0, jnp.iinfo(jnp.int32).max)
+        r_in = r if cfg.error_feedback else jnp.zeros_like(r)
+        p, s, res = quantize_pack_ef(x, r_in, seed, bits=bits)
+        packed.append(p)
+        scales.append(s)
+        new_res.append(res if cfg.error_feedback else jnp.zeros_like(res))
+    return (PackedWire(tuple(packed), tuple(scales)),
+            jax.tree.unflatten(treedef, new_res))
 
 
 def init_residual(params: PyTree) -> PyTree:

@@ -188,6 +188,24 @@ def uplink(comm: CommConfig, delta: PyTree, residual: PyTree, theta: Array,
     return wire, new_residual, tier_idx
 
 
+def uplink_packed(comm: CommConfig, delta: PyTree, residual: PyTree,
+                  mask: Array, key: Array, *, axis_name: Any = None
+                  ) -> tuple["comm_compress.PackedWire", PyTree]:
+    """Uplink stage, fused wire format: one vmapped
+    quantize+pack+EF-update kernel pass per worker
+    (`compress_with_ef_packed`), emitting stacked packed payloads
+    instead of dense decodes. Same per-worker key split as `uplink`, so
+    payload bits match the legacy route exactly. Single-tier only (the
+    packed route is gated off under adaptive_bits)."""
+    C = mask.shape[0]
+    keys = jax.random.split(key, C)
+    wire, new_res = jax.vmap(
+        functools.partial(comm_compress.compress_with_ef_packed, comm),
+        spmd_axis_name=axis_name)(delta, residual, keys)
+    new_residual = comm_compress.select_residual(mask, new_res, residual)
+    return wire, new_residual
+
+
 # ---------------------------------------------------------------------------
 # Downlink stage
 # ---------------------------------------------------------------------------
@@ -247,15 +265,37 @@ def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
         snr_db = phy.snr_db
     else:
         snr_db = None
+    # Fused wire-format route: when the Uplink/Aggregate stages are the
+    # defaults (an injected stage must see the legacy dense wire) and
+    # the config qualifies (quantized single-tier uplink, no AWGN, f32
+    # leaves), the round runs quantize+pack+EF and dequant+masked-
+    # aggregate as the two fused kernel passes instead of the dense
+    # compress -> decode -> aggregate chain. Payload bits, survivor
+    # masks, aggregates, and byte accounting are bit-identical to the
+    # legacy route; the EF residual agrees up to XLA FMA contraction
+    # (tests/test_wire_kernels.py). The decision is static under jit.
+    packed_route = (uplink_fn is uplink
+                    and aggregate_fn is comm_channel.receive
+                    and comm_compress.packed_wire_eligible(comm, delta))
     # stage_span is a shared nullcontext unless an obs tracer is
     # installed; spans inside a jitted round fire at trace time
-    with stage_span("Uplink"):
-        wire, residual, tier_idx = uplink_fn(comm, delta, residual, theta,
-                                             mask, qkey, snr_db=snr_db,
-                                             axis_name=axis_name)
-    with stage_span("Aggregate"):
-        agg_params, mask_eff = aggregate_fn(comm, global_params, wire, mask,
-                                            wkey, snr_db=snr_db)
+    if packed_route:
+        with stage_span("Uplink"):
+            wire, residual = uplink_packed(comm, delta, residual, mask,
+                                           qkey, axis_name=axis_name)
+            tier_idx = None
+        with stage_span("Aggregate"):
+            agg_params, mask_eff = comm_channel.receive_packed(
+                comm, global_params, wire, mask, wkey, snr_db=snr_db)
+    else:
+        with stage_span("Uplink"):
+            wire, residual, tier_idx = uplink_fn(comm, delta, residual,
+                                                 theta, mask, qkey,
+                                                 snr_db=snr_db,
+                                                 axis_name=axis_name)
+        with stage_span("Aggregate"):
+            agg_params, mask_eff = aggregate_fn(comm, global_params, wire,
+                                                mask, wkey, snr_db=snr_db)
     with stage_span("Downlink"):
         bcast, ps_residual = downlink_fn(comm, agg_params, global_params,
                                          ps_residual,

@@ -7,11 +7,23 @@ Each kernel module trio provides:
 
 Kernels: pso_update (the paper's Eq.-8 fused pointwise swarm update),
 flash_attention (blockwise causal/sliding attention), rglru_scan
-(streaming linear-recurrence scan), quant_pack (fused stochastic
-int8/int4 quantize-and-pack for the repro.comm uplink compressors; its
-hash-RNG makes the ref.py oracle bit-identical to the kernel). On this
-CPU-only container they execute via interpret=True
-(`repro.kernels.runtime.interpret_default`) — quant_pack dispatches to
-its jnp ref path instead, which is cheaper under the engines' vmap —
-and on TPU they compile through Mosaic.
+(streaming linear-recurrence scan), and the wire-path pair that fuses
+the Eq.-7 uplink hot loop end to end (docs/kernels.md):
+
+  quant_pack  stochastic int8/int4 quantize-and-pack, plus the fused
+              quantize+pack+error-feedback-update pass
+              (`quantize_pack_ef`: delta + residual -> packed payload,
+              block scales, new residual in one read) and the decode
+              kernel (`dequantize_unpack`); the shared hash-RNG makes
+              the ref.py oracles bit-identical to the kernels
+  wire_agg    fused dequant + masked-aggregate: the PS folds C packed
+              payloads straight into the Eq.-7 mean / coordinate-wise
+              median / trimmed mean without materializing C dense
+              reconstructions
+
+On this CPU-only container they execute via interpret=True
+(`repro.kernels.runtime.interpret_default`) — the wire-path kernels
+dispatch to their jnp ref paths instead, which is cheaper under the
+engines' vmap — and on TPU they compile through Mosaic. Every dispatch
+decision is reported to the obs bus (`runtime.note_dispatch`).
 """

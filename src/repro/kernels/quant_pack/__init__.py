@@ -1,10 +1,14 @@
 from repro.kernels.quant_pack.ops import (dequantize_unpack, quant_dequant,
-                                          quantize_pack)
+                                          quantize_pack, quantize_pack_ef)
 from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS, QMAX,
                                                  block_uniform,
-                                                 quant_pack_2d)
-from repro.kernels.quant_pack.ref import dequant_unpack_ref, quant_pack_ref
+                                                 dequant_unpack_2d,
+                                                 quant_pack_2d,
+                                                 quant_pack_ef_2d)
+from repro.kernels.quant_pack.ref import (dequant_unpack_ref,
+                                          quant_pack_ef_ref, quant_pack_ref)
 
-__all__ = ["BLOCK_ROWS", "QMAX", "block_uniform", "dequant_unpack_ref",
-           "dequantize_unpack", "quant_dequant", "quant_pack_2d",
-           "quant_pack_ref", "quantize_pack"]
+__all__ = ["BLOCK_ROWS", "QMAX", "block_uniform", "dequant_unpack_2d",
+           "dequant_unpack_ref", "dequantize_unpack", "quant_dequant",
+           "quant_pack_2d", "quant_pack_ef_2d", "quant_pack_ef_ref",
+           "quant_pack_ref", "quantize_pack", "quantize_pack_ef"]

@@ -1,11 +1,14 @@
-"""Public wrapper for the quantize-pack kernel: flattens an arbitrary
-array (or pytree leaf) to the kernel's (rows, 128) layout, produces the
-packed wire payload + block scales, and exposes the simulation-friendly
+"""Public wrappers for the quantize-pack kernel family: flatten an
+arbitrary array (or pytree leaf) to the kernels' (rows, 128) layout,
+produce the packed wire payload + block scales (+ the fused
+error-feedback residual), and expose the simulation-friendly
 quantize-dequantize round trip used by `repro/comm/compress.py`.
 
-Dispatch: on TPU the fused pallas kernel runs compiled; on CPU the
-bit-identical ref.py path runs instead (plain jnp — fast under vmap,
-same payload bytes)."""
+Dispatch: on TPU the fused pallas kernels run compiled; on CPU the
+bit-identical ref.py paths run instead (plain jnp — fast under vmap,
+same payload bytes). Every wrapper reports its decision via
+`runtime.note_dispatch`, so obs streams carry a KernelEvent per
+compiled round."""
 from __future__ import annotations
 
 import functools
@@ -14,8 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import runtime
-from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS, quant_pack_2d)
-from repro.kernels.quant_pack.ref import dequant_unpack_ref, quant_pack_ref
+from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS,
+                                                 dequant_unpack_2d,
+                                                 quant_pack_2d,
+                                                 quant_pack_ef_2d)
+from repro.kernels.quant_pack.ref import (dequant_unpack_ref,
+                                          quant_pack_ef_ref, quant_pack_ref)
 
 _LANES = 128
 
@@ -43,11 +50,49 @@ def quantize_pack(x: jax.Array, seed: jax.Array, *, bits: int = 8,
     return quant_pack_2d(x2, seed, bits=bits, interpret=False)
 
 
+def quantize_pack_ef(x: jax.Array, residual: jax.Array, seed: jax.Array, *,
+                     bits: int = 8, interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused uplink hot path: quantize + pack + error-feedback update in
+    one pass over x + residual. Returns (packed, scales, new_residual)
+    where new_residual = (x + residual) - dequant(packed, scales),
+    shaped/dtyped like x (f32) — no dense f32 wire intermediate.
+
+    Payload and scales are bit-identical to the compose
+    `quantize_pack(x + residual)` then `dequantize_unpack`; the
+    residual is the same subtract but evaluated at the padded block
+    shape, so it can differ from a leaf-shape legacy subtract by XLA's
+    FMA contraction (<= 1 ulp of acc). Kernel vs ref is bit-identical
+    (asserted in tests/test_wire_kernels.py)."""
+    if interpret is None:
+        interpret = runtime.interpret_default()
+    runtime.note_dispatch("quant_pack_ef", interpret, bits=bits)
+    x2 = _pad_2d(x.reshape(-1).astype(jnp.float32))
+    r2 = _pad_2d(residual.reshape(-1).astype(jnp.float32))
+    if interpret:
+        packed, scales, res2 = quant_pack_ef_ref(x2, r2, seed, bits=bits)
+    else:
+        packed, scales, res2 = quant_pack_ef_2d(x2, r2, seed, bits=bits,
+                                                interpret=False)
+    res = res2.reshape(-1)[: x.size].reshape(x.shape)
+    return packed, scales, res
+
+
 def dequantize_unpack(packed: jax.Array, scales: jax.Array,
                       shape: tuple[int, ...], *, bits: int = 8,
-                      dtype=jnp.float32) -> jax.Array:
-    """Decode a wire payload back to a dense array of `shape`."""
-    x2 = dequant_unpack_ref(packed, scales, bits=bits)
+                      dtype=jnp.float32,
+                      interpret: bool | None = None) -> jax.Array:
+    """Decode a wire payload back to a dense array of `shape`.
+    interpret=None dispatches by backend like quantize_pack (this used
+    to run the jnp ref unconditionally, leaving the decode half of the
+    wire uncompiled on TPU)."""
+    if interpret is None:
+        interpret = runtime.interpret_default()
+    runtime.note_dispatch("dequant_unpack", interpret, bits=bits)
+    if interpret:
+        x2 = dequant_unpack_ref(packed, scales, bits=bits)
+    else:
+        x2 = dequant_unpack_2d(packed, scales, bits=bits, interpret=False)
     n = 1
     for s in shape:
         n *= s
@@ -62,4 +107,4 @@ def quant_dequant(x: jax.Array, seed: jax.Array, *, bits: int = 8,
     `repro.comm.budget.leaf_payload_bytes`)."""
     packed, scales = quantize_pack(x, seed, bits=bits, interpret=interpret)
     return dequantize_unpack(packed, scales, x.shape, bits=bits,
-                             dtype=x.dtype)
+                             dtype=x.dtype, interpret=interpret)

@@ -1,4 +1,4 @@
-"""Fused stochastic quantize-and-pack kernel (uplink compression).
+"""Fused stochastic quantize-and-pack kernels (uplink wire format).
 
 The int8/int4 uplink compressors (`repro/comm/compress.py`) reduce a
 worker's round delta to b-bit integers plus one f32 scale per block.
@@ -7,6 +7,17 @@ random field, and the rounded tensor as separate HBM round-trips; the
 payload is produced in one pass here: each grid step reads one
 (BLOCK_ROWS, 128) f32 tile from VMEM and emits the packed integer tile
 plus its scale (read N f32 words, write N*b/32 + 1).
+
+Three kernels share the block math:
+
+  quant_pack_2d     quantize + pack              (x -> packed, scales)
+  quant_pack_ef_2d  quantize + pack + error-feedback update in ONE pass
+                    (delta, residual -> packed, scales, new residual =
+                    acc - dequant(q)) — the uplink hot loop, no dense
+                    f32 round-trip between compression and EF
+  dequant_unpack_2d packed, scales -> dense f32  (the decode half; the
+                    PS-side aggregate fuses this further, see
+                    kernels/wire_agg)
 
 Layout: the flattened parameter vector is tiled to (rows, 128) like
 `pso_update`. int8 packs 1:1 into an int8 tile; int4 packs two rows per
@@ -66,6 +77,30 @@ def _quantize_block(x: jax.Array, seed: jax.Array, block_idx: jax.Array,
     return q, scale
 
 
+def _pack_nibbles(q: jax.Array) -> jax.Array:
+    """(..., B, 128) integral f32 in [-7, 7] -> (..., B/2, 128) uint8.
+    Output row r holds rows r (low nibble) and r + B/2 (high nibble).
+
+    The bit ops run in int32 and cast to uint8 only at the end: Mosaic
+    has no uint8 shift/or lowering (sub-word vectors only support
+    widen/narrow), so the original uint8 formulation ran in interpret
+    mode only. Values are exact small ints, so the int32 route is
+    bit-identical."""
+    half = q.shape[-2] // 2
+    biased = (q + 8.0).astype(jnp.int32)         # [-7,7] -> [1,15]
+    packed = biased[..., :half, :] | (biased[..., half:, :] << 4)
+    return packed.astype(jnp.uint8)
+
+
+def _unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of _pack_nibbles: (..., B/2, 128) uint8 -> (..., B, 128)
+    f32 in [-7, 7]. Same int32 discipline (widen first, then bit ops)."""
+    p = packed.astype(jnp.int32)
+    lo = ((p & 0xF) - 8).astype(jnp.float32)
+    hi = ((p >> 4) - 8).astype(jnp.float32)
+    return jnp.concatenate([lo, hi], axis=-2)
+
+
 def _kernel_int8(seed_ref, x_ref, q_ref, scale_ref):
     q, scale = _quantize_block(x_ref[...], seed_ref[0],
                                pl.program_id(0), QMAX[8])
@@ -76,9 +111,7 @@ def _kernel_int8(seed_ref, x_ref, q_ref, scale_ref):
 def _kernel_int4(seed_ref, x_ref, q_ref, scale_ref):
     q, scale = _quantize_block(x_ref[...], seed_ref[0],
                                pl.program_id(0), QMAX[4])
-    half = q.shape[0] // 2
-    biased = (q + 8.0).astype(jnp.uint8)        # [-7,7] -> [1,15]
-    q_ref[...] = biased[:half] | (biased[half:] << 4)
+    q_ref[...] = _pack_nibbles(q)
     scale_ref[0] = scale
 
 
@@ -117,3 +150,93 @@ def quant_pack_2d(x: jax.Array, seed: jax.Array, *, bits: int = 8,
                    jax.ShapeDtypeStruct((rows // block_rows,), jnp.float32)),
         interpret=interpret,
     )(jnp.asarray(seed, jnp.int32).reshape(1), x)
+
+
+def _make_ef_kernel(bits: int):
+    qmax = QMAX[bits]
+
+    def kernel(seed_ref, x_ref, r_ref, q_ref, scale_ref, res_ref):
+        acc = x_ref[...] + r_ref[...]            # EF carry folded in VMEM
+        q, scale = _quantize_block(acc, seed_ref[0], pl.program_id(0), qmax)
+        q_ref[...] = q.astype(jnp.int8) if bits == 8 else _pack_nibbles(q)
+        scale_ref[0] = scale
+        # q is exactly what the receiver unpacks (the int round trip is
+        # lossless), so acc - q*scale IS acc - dequant(packed) bit-for-bit
+        res_ref[...] = acc - q * scale
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "interpret", "block_rows"))
+def quant_pack_ef_2d(x: jax.Array, residual: jax.Array, seed: jax.Array, *,
+                     bits: int = 8, interpret: bool = True,
+                     block_rows: int = BLOCK_ROWS
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused uplink pass on (rows, 128) f32 layouts: one grid step reads
+    a delta tile + its error-feedback residual tile and emits the packed
+    wire tile, the block scale, and the NEW residual tile — the legacy
+    compress -> dequant -> subtract chain without the dense f32
+    round-trip (reads 8 bytes/elem, writes 4 + b/8 instead of the
+    unfused ~36 + b/4; see docs/kernels.md).
+
+    Returns (packed, scales, new_residual); packed/scales exactly as
+    `quant_pack_2d(x + residual, seed)`, new_residual f32 like x."""
+    rows, lanes = x.shape
+    assert x.shape == residual.shape, (x.shape, residual.shape)
+    assert lanes == _LANES and rows % block_rows == 0, (rows, lanes)
+    assert bits in (8, 4), bits
+    grid = (rows // block_rows,)
+    tile = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    seed_spec = pl.BlockSpec((1,), lambda i: (0,))
+    scale_spec = pl.BlockSpec((1,), lambda i: (i,))
+    if bits == 8:
+        q_spec = tile
+        q_shape = jax.ShapeDtypeStruct((rows, lanes), jnp.int8)
+    else:
+        q_spec = pl.BlockSpec((block_rows // 2, lanes), lambda i: (i, 0))
+        q_shape = jax.ShapeDtypeStruct((rows // 2, lanes), jnp.uint8)
+    return pl.pallas_call(
+        _make_ef_kernel(bits),
+        grid=grid,
+        in_specs=[seed_spec, tile, tile],
+        out_specs=(q_spec, scale_spec, tile),
+        out_shape=(q_shape,
+                   jax.ShapeDtypeStruct((rows // block_rows,), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, lanes), jnp.float32)),
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.int32).reshape(1), x, residual)
+
+
+def _make_dequant_kernel(bits: int):
+    def kernel(scale_ref, q_ref, x_ref):
+        q = (q_ref[...].astype(jnp.float32) if bits == 8
+             else _unpack_nibbles(q_ref[...]))
+        x_ref[...] = q * scale_ref[0]
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "interpret", "block_rows"))
+def dequant_unpack_2d(packed: jax.Array, scales: jax.Array, *,
+                      bits: int = 8, interpret: bool = True,
+                      block_rows: int = BLOCK_ROWS) -> jax.Array:
+    """Decode kernel: packed (rows, 128) int8 / (rows/2, 128) uint8 plus
+    per-block scales -> dense (rows, 128) f32. Inverse of the pack half
+    of quant_pack_2d / quant_pack_ef_2d."""
+    lanes = packed.shape[1]
+    rows = packed.shape[0] * (2 if bits == 4 else 1)
+    assert lanes == _LANES and rows % block_rows == 0, packed.shape
+    assert bits in (8, 4), bits
+    grid = (rows // block_rows,)
+    pb = block_rows // (2 if bits == 4 else 1)
+    return pl.pallas_call(
+        _make_dequant_kernel(bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((pb, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+        interpret=interpret,
+    )(scales, packed)

@@ -1,24 +1,29 @@
-"""Pure-jnp oracle for the fused quantize-pack kernel.
+"""Pure-jnp oracles for the quantize-pack kernel family.
 
-Also the CPU fallback for `repro/comm/compress.py`: it implements the
-identical block layout, scale rule, and hash-RNG rounding (shared via
-`block_uniform`), so payloads are bit-identical to the kernel while
-staying plain jnp — cheap under the engines' vmap over workers, where
-interpret-mode pallas would be needlessly slow.
+Also the CPU fallback for `repro/comm/compress.py`: they implement the
+identical block layout, scale rule, hash-RNG rounding (shared via
+`block_uniform`) and nibble packing (shared `_pack_nibbles` /
+`_unpack_nibbles`), so payloads and residuals are bit-identical to the
+kernels while staying plain jnp — cheap under the engines' vmap over
+workers, where interpret-mode pallas would be needlessly slow.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS, QMAX,
-                                                 _quantize_block)
+                                                 _pack_nibbles,
+                                                 _quantize_block,
+                                                 _unpack_nibbles)
 
 
 def quant_pack_ref(x: jax.Array, seed: jax.Array, *, bits: int = 8,
                    block_rows: int = BLOCK_ROWS
                    ) -> tuple[jax.Array, jax.Array]:
-    """Matches quant_pack_2d bit-exactly: vmaps the kernel's per-block
+    """Matches quant_pack_2d bit-exactly: unrolls the kernel's per-block
     math (same reduction order — a stacked jnp.max over all blocks can
     differ by 1 ulp). x: (rows, 128) f32, rows a multiple of block_rows.
     Returns (packed, scales)."""
@@ -38,10 +43,43 @@ def quant_pack_ref(x: jax.Array, seed: jax.Array, *, bits: int = 8,
     scales = jnp.stack([p[1] for p in per_block])
     if bits == 8:
         return q.astype(jnp.int8).reshape(rows, lanes), scales
-    half = block_rows // 2
-    biased = (q + 8.0).astype(jnp.uint8)
-    packed = biased[:, :half] | (biased[:, half:] << 4)
-    return packed.reshape(rows // 2, lanes), scales
+    return _pack_nibbles(q).reshape(rows // 2, lanes), scales
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows"))
+def quant_pack_ef_ref(x: jax.Array, residual: jax.Array, seed: jax.Array, *,
+                      bits: int = 8, block_rows: int = BLOCK_ROWS
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for quant_pack_ef_2d: per block, acc = x + residual, then
+    the shared quantize math, then new_residual = acc - q*scale (== acc
+    - dequant(packed), the int round trip is lossless). Bit-identical to
+    the fused kernel AND to the legacy compose
+    quant_pack_ref(x + residual) / dequant_unpack_ref / subtract —
+    *under jit*: the def-site jit keeps the residual's multiply-subtract
+    on the compiled (FMA-fused) path even when called eagerly, matching
+    the always-jitted kernel and the jitted engine rounds."""
+    rows, lanes = x.shape
+    assert x.shape == residual.shape, (x.shape, residual.shape)
+    assert lanes == 128 and rows % block_rows == 0, (rows, lanes)
+    nb = rows // block_rows
+    qmax = QMAX[bits]
+    xb = x.reshape(nb, block_rows, lanes)
+    rb = residual.reshape(nb, block_rows, lanes)
+    seed = jnp.asarray(seed, jnp.int32)
+
+    qs, scs, ress = [], [], []
+    for i in range(nb):                          # unrolled: see above
+        acc = xb[i] + rb[i]
+        q, scale = _quantize_block(acc, seed, jnp.int32(i), qmax)
+        qs.append(q)
+        scs.append(scale)
+        ress.append(acc - q * scale)
+    q = jnp.stack(qs)
+    scales = jnp.stack(scs)
+    res = jnp.stack(ress).reshape(rows, lanes)
+    if bits == 8:
+        return q.astype(jnp.int8).reshape(rows, lanes), scales, res
+    return _pack_nibbles(q).reshape(rows // 2, lanes), scales, res
 
 
 def dequant_unpack_ref(packed: jax.Array, scales: jax.Array, *,
@@ -55,9 +93,6 @@ def dequant_unpack_ref(packed: jax.Array, scales: jax.Array, *,
     else:
         rows = packed.shape[0] * 2
         half = block_rows // 2
-        pb = packed.reshape(-1, half, lanes)
-        lo = (pb & 0xF).astype(jnp.float32) - 8.0
-        hi = (pb >> 4).astype(jnp.float32) - 8.0
-        q = jnp.concatenate([lo, hi], axis=1)
+        q = _unpack_nibbles(packed.reshape(-1, half, lanes))
     qb = q.reshape(rows // block_rows, block_rows, lanes)
     return (qb * scales[:, None, None]).reshape(rows, lanes)

@@ -1,0 +1,5 @@
+from repro.kernels.wire_agg.ops import wire_aggregate
+from repro.kernels.wire_agg.ref import wire_agg_ref
+from repro.kernels.wire_agg.wire_agg import AGGREGATORS, wire_agg_2d
+
+__all__ = ["AGGREGATORS", "wire_agg_2d", "wire_agg_ref", "wire_aggregate"]

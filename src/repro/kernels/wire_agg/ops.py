@@ -1,0 +1,54 @@
+"""Public wrapper for the fused dequant + masked-aggregate kernel.
+
+`wire_aggregate` takes one leaf's stacked wire payloads (C workers) and
+returns the aggregated dense delta of the original leaf shape — the
+Aggregate half of the packed wire route (`channel.receive_packed`),
+which never materializes the C dense reconstructions the legacy route
+decodes first.
+
+Dispatch mirrors quant_pack/ops.py: compiled pallas on TPU, the
+bit-identical ref on CPU, reported via `runtime.note_dispatch`."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.wire_agg.ref import wire_agg_ref
+from repro.kernels.wire_agg.wire_agg import AGGREGATORS, wire_agg_2d
+
+
+def wire_aggregate(packed: jax.Array, scales: jax.Array, mask: jax.Array,
+                   *, shape: tuple[int, ...], bits: int = 8,
+                   aggregator: str = "mean", trim_ratio: float = 0.1,
+                   weights: jax.Array | None = None,
+                   interpret: bool | None = None) -> jax.Array:
+    """Aggregate C packed payloads of one leaf into a dense f32 delta.
+
+    packed: (C, rows, 128) int8 / (C, rows/2, 128) uint8 (stacked
+    quant_pack wire format); scales: (C, nb) f32; mask: (C,) delivery
+    mask; weights: optional (C,) per-worker weights (None = 1s; mean
+    weights the sum and the denominator, robust aggregators scale the
+    sorted values). Returns the (*shape,) f32 aggregate —
+    `channel.receive`'s `agg` term, before the += into the global
+    params. interpret=None dispatches by backend."""
+    assert aggregator in AGGREGATORS, aggregator
+    if interpret is None:
+        interpret = runtime.interpret_default()
+    C = packed.shape[0]
+    runtime.note_dispatch("wire_agg", interpret, bits=bits,
+                          aggregator=aggregator, workers=C)
+    mask2 = mask.astype(jnp.float32).reshape(C, 1)
+    w2 = (jnp.ones((C, 1), jnp.float32) if weights is None
+          else weights.astype(jnp.float32).reshape(C, 1))
+    if interpret:
+        x2 = wire_agg_ref(packed, scales, mask2, w2, bits=bits,
+                          aggregator=aggregator, trim_ratio=trim_ratio)
+    else:
+        x2 = wire_agg_2d(packed, scales, mask2, w2, bits=bits,
+                         aggregator=aggregator, trim_ratio=trim_ratio,
+                         interpret=False)
+    n = 1
+    for s in shape:
+        n *= s
+    return x2.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused dequant + masked-aggregate kernel.
+
+Also the CPU fallback for `repro/comm/channel.receive_packed`: it
+replays `channel.receive` / `channel._robust_receive` operation-for-
+operation on the stacked wire layout — same dequant multiply, same
+masked sum / jnp.sort + dynamic order-statistic picks — so the packed
+route is bit-identical to the legacy dense route on CPU (asserted in
+tests/test_wire_kernels.py; the elementwise sums/sorts are layout-
+invariant between the (C, *leaf) and padded (C, rows, 128) views).
+
+The kernel's transposition-network sort and iota order-stat picks are
+value-equal to this oracle (only ±0.0 tie placement can differ).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS,
+                                                 _unpack_nibbles)
+from repro.kernels.wire_agg.wire_agg import AGGREGATORS
+
+
+def wire_agg_ref(packed: jax.Array, scales: jax.Array, mask: jax.Array,
+                 weights: jax.Array, *, bits: int = 8,
+                 aggregator: str = "mean", trim_ratio: float = 0.1,
+                 block_rows: int = BLOCK_ROWS) -> jax.Array:
+    """Same contract as wire_agg_2d: stacked payloads (C, ...) ->
+    (rows, 128) f32 aggregate delta."""
+    C = packed.shape[0]
+    lanes = packed.shape[2]
+    assert aggregator in AGGREGATORS, aggregator
+    if bits == 8:
+        rows = packed.shape[1]
+        q = packed.astype(jnp.float32)
+    else:
+        rows = packed.shape[1] * 2
+        half = block_rows // 2
+        q = _unpack_nibbles(packed.reshape(C, -1, half, lanes)
+                            ).reshape(C, rows, lanes)
+    nb = rows // block_rows
+    assert scales.shape == (C, nb), (scales.shape, C, nb)
+    assert mask.shape == weights.shape == (C, 1), (mask.shape,
+                                                   weights.shape)
+    qb = q.reshape(C, nb, block_rows, lanes)
+    d = (qb * scales[:, :, None, None]).reshape(C, rows, lanes)
+
+    if aggregator == "mean":
+        mw = mask * weights                            # (C, 1)
+        s = (mw[:, :, None] * d).sum(axis=0)
+        return s / jnp.maximum(mw.sum(), 1.0)
+
+    # robust path: verbatim channel._robust_receive math on the stacked
+    # layout (jnp.sort + dynamic_index_in_dim, NOT the kernel's network,
+    # so the CPU route stays bit-identical to the legacy receive)
+    k = mask.sum().astype(jnp.int32)
+    dw = d * weights[:, :, None]
+    m3 = mask[:, :, None]
+    svals = jnp.sort(jnp.where(m3 > 0, dw, jnp.inf), axis=0)
+    if aggregator == "median":
+        lo = jnp.maximum(k - 1, 0) // 2
+        hi = jnp.maximum(k - 1, 0) - lo
+        agg = 0.5 * (jax.lax.dynamic_index_in_dim(svals, lo, 0, False)
+                     + jax.lax.dynamic_index_in_dim(svals, hi, 0, False))
+    else:  # trimmed_mean
+        t = (trim_ratio * k.astype(jnp.float32)).astype(jnp.int32)
+        t = jnp.minimum(t, jnp.maximum(k - 1, 0) // 2)
+        idx = jnp.arange(C).reshape(C, 1, 1)
+        keep = (idx >= t) & (idx < k - t)
+        cnt = jnp.maximum((k - 2 * t).astype(jnp.float32), 1.0)
+        agg = jnp.where(keep, svals, 0.0).sum(axis=0) / cnt
+    return jnp.where(k > 0, agg, 0.0)
