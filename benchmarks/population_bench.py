@@ -1,0 +1,119 @@
+"""Population-engine scaling: round cost vs registered fleet size.
+
+The sampled-cohort engine (core/population.py) holds O(P) persistent
+scalars but does O(K) work per round, so the per-round wall-time curve
+over P ∈ {1k, 100k, 1M} at fixed K should be flat — the training round
+dominates and the schedule (Gumbel-top-k over P) plus scatter (K-row
+writes into the (P,) columns) stay in the noise. This benchmark pins
+that curve:
+
+  * per-round wall time of the full wrapped step (schedule + reseat +
+    inner round + scatter), averaged over timed rounds after warm-up;
+  * the isolated schedule / scatter cost at each P;
+  * the registry footprint (36 B/device).
+
+`--json` writes BENCH_population.json at the repo root (the CI
+population-smoke job asserts its shape); `--quick` times fewer rounds.
+CPU container numbers time jnp/XLA-CPU — the curve's SHAPE (flat in P
+for the round, sub-linear growth only in the O(P) schedule reduction)
+is the pinned claim, not the absolute milliseconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import ROOT, print_table, save_record
+from repro.core import population as pop
+from repro.experiments.registry import get_scenario
+from repro.experiments.runner import build
+from repro.experiments.spec import override
+
+POPULATIONS = (1_000, 100_000, 1_000_000)
+JSON_OUT = ROOT / "BENCH_population.json"
+
+
+def _time(fn, reps: int) -> float:
+    jax.block_until_ready(fn())      # warm-up / compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def bench_population(P: int, rounds: int, reps: int) -> dict:
+    spec = override(get_scenario("fleet/million-uniform"),
+                    f"fleet.population={P}", f"run.rounds={rounds}")
+    t0 = time.time()
+    prep = build(spec)
+    build_s = time.time() - t0
+    K = spec.data.num_workers
+    comm = spec.comm
+
+    # isolated O(P)-facing pieces: the jitted sampler+gather and the
+    # K-row scatter against a P-wide table
+    table = prep.state.table
+    sched = lambda: pop.schedule(table, jnp.int32(1),
+                                 jax.random.PRNGKey(0), comm=comm,
+                                 cohort_size=K, policy="uniform")
+    schedule_s = _time(sched, reps)
+    idx, phy = jax.tree.map(jax.block_until_ready, sched())
+    theta = jnp.zeros((K,), jnp.float32)
+    scatter_s = _time(
+        lambda: pop.scatter_round(table, idx, phy, theta, theta,
+                                  jnp.int32(1)), reps)
+
+    # full wrapped rounds: first is compile + warm-up, rest are timed
+    state, key = prep.state, prep.key
+    round_times = []
+    for t in range(rounds):
+        t1 = time.time()
+        state, metrics, key = prep.step(state, key)
+        jax.block_until_ready(metrics.global_loss)
+        round_times.append(time.time() - t1)
+    timed = round_times[1:] or round_times
+    return {"population": P, "cohort": K,
+            "round_s": round(sum(timed) / len(timed), 4),
+            "round0_s": round(round_times[0], 4),
+            "schedule_s": round(schedule_s, 6),
+            "scatter_s": round(scatter_s, 6),
+            "table_mb": round(pop.table_bytes(table) / 1e6, 2),
+            "build_s": round(build_s, 2),
+            "final_loss": float(metrics.global_loss)}
+
+
+def run(quick: bool = False, write_json: bool = False) -> dict:
+    rounds = 2 if quick else 4
+    reps = 3 if quick else 10
+    rows = [bench_population(P, rounds, reps) for P in POPULATIONS]
+    print_table(
+        ["P", "K", "round_s", "schedule_s", "scatter_s", "table_mb"],
+        [[r["population"], r["cohort"], r["round_s"], r["schedule_s"],
+          r["scatter_s"], r["table_mb"]] for r in rows],
+        "Population engine — per-round cost vs registered fleet size")
+    rec = {"schema": 1, "fixed_cohort": rows[0]["cohort"],
+           "quick": quick, "rows": rows}
+    save_record("population_bench", rec)
+    if write_json:
+        JSON_OUT.write_text(json.dumps(rec, indent=1))
+        print(f"wrote {JSON_OUT}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timed rounds/reps (CI)")
+    ap.add_argument("--json", action="store_true",
+                    help=f"write the pinned scaling record to {JSON_OUT}")
+    args = ap.parse_args()
+    run(quick=args.quick, write_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

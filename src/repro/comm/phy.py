@@ -126,6 +126,25 @@ def evolve(cfg: CommConfig, phy: PhyState, key: Array) -> PhyState:
         snr_db=instantaneous_snr_db(cfg, h_re, h_im, phy.pathloss_db))
 
 
+def lazy_fading_coeffs(cfg: CommConfig, steps: Array
+                       ) -> tuple[Array, Array]:
+    """Closed-form compression of `steps` Gauss-Markov rounds into one
+    draw: iterating h' = rho h + sqrt(1-rho^2) CN(0,1) Δ times gives
+    exactly
+
+        h_{t+Δ} = rho^Δ h_t + sqrt(1 - rho^(2Δ)) CN(0, 1)
+
+    (the innovations are independent Gaussians, so their weighted sum
+    is one Gaussian with the telescoped variance). Returns the
+    (rho^Δ, innovation-scale) pair for an int32 `steps` vector; Δ=0
+    yields (1, 0) — the identity. The population engine uses this to
+    catch idle devices up at O(K) instead of replaying Δ per-round
+    draws."""
+    rho_d = jnp.power(jnp.float32(cfg.doppler_rho),
+                      steps.astype(jnp.float32))
+    return rho_d, jnp.sqrt(jnp.maximum(1.0 - rho_d * rho_d, 0.0))
+
+
 def advance_age(phy: PhyState, mask_eff: Array) -> PhyState:
     """Refresh the staleness counter after the Aggregate stage: a
     delivered upload resets the worker's age, everyone else ages one

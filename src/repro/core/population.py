@@ -1,0 +1,238 @@
+"""repro.core.population — million-device fleets with O(K) round state.
+
+Both engines stack the whole fleet into one worker-axis pytree, capping
+`num_workers` at a few hundred by memory. Production FL (and the DSL
+survey's massive-fleet regime, arXiv:2403.20188) instead registers a
+huge population P and activates a small cohort K per round. This module
+is that split:
+
+  PopulationTable  per-device persistent scalars, struct-of-arrays over
+                   P: the physical-layer state (fading gains, pathloss
+                   slot, last-known SNR, delivery age), the EF-residual
+                   norm, the last observed Eq.-5 score, and last-seen /
+                   last-evolved round markers. Nine (P,) vectors — 36
+                   bytes per device, 36 MB at P=1M — and NEVER an
+                   O(P) model pytree.
+  sample_cohort    a jitted K-subset sampler (Gumbel-top-k: adding
+                   i.i.d. Gumbel noise to logits and taking the top K
+                   is an exact without-replacement weighted draw) with
+                   three policies: `uniform`, `score_weighted` (prefer
+                   devices whose last Eq.-5 theta was low), `snr_aware`
+                   (prefer devices whose last-known received SNR is
+                   high).
+  gather_phy       cohort rows -> a K-slot PhyState for the engine,
+                   catching up idle rounds lazily: Δ rounds of
+                   Gauss-Markov fading collapse into ONE closed-form
+                   draw (`phy.lazy_fading_coeffs`), and the delivery
+                   age advances by the idle-round count. O(K) work per
+                   round no matter how large P is.
+  scatter_round    post-round cohort state back into the table.
+
+Key discipline: everything here draws from `fold_in(round_key,
+POP_SALT)` — a stream the legacy engines never touch — and the
+degenerate configuration (population == cohort_size, uniform policy)
+selects the identity cohort with lag-0 catch-ups guarded by
+`jnp.where`, so such runs are bit-identical to the legacy full-fleet
+route (tests/test_population.py pins this on the golden configs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import phy as comm_phy
+from repro.comm.budget import CommConfig
+from repro.comm.phy import PhyState
+
+Array = jax.Array
+
+POP_SALT = 0xC0   # population scheduling key = fold_in(round_key, salt):
+#                   sampling + lazy catch-up draws live on their own
+#                   stream, leaving the engines' legacy splits untouched
+
+COHORT_POLICIES = ("uniform", "score_weighted", "snr_aware")
+
+_SNR_TEMP_DB = 10.0   # snr_aware softness: +10 dB last-known SNR ~ e x odds
+
+
+class PopulationTable(NamedTuple):
+    """Struct-of-arrays registry of P devices — O(P) scalars only.
+
+    `phy` is a population-sized PhyState: the same five per-device
+    channel columns the engines carry for the cohort, resident here for
+    everyone (pathloss is the device's static slot in the P-wide
+    profile; h/snr/age are its last participating state). `score` is
+    the last observed Eq.-5 theta, `ef_norm` the L2 norm of the
+    device's uplink error-feedback residual when it left the cohort.
+    `last_seen` / `last_evolved` are round indices (-1 = never): the
+    round the device last held a cohort seat, and the round whose
+    in-round fading evolution produced the stored h."""
+    phy: PhyState        # five (P,) columns (h_re/h_im/pathloss/snr/age)
+    ef_norm: Array       # (P,) f32 uplink EF-residual L2 norm at exit
+    score: Array         # (P,) f32 last observed Eq.-5 theta
+    last_seen: Array     # (P,) i32 last participation round (-1 = never)
+    last_evolved: Array  # (P,) i32 round of the stored fading state
+
+
+def init_table(comm: CommConfig, population: int) -> PopulationTable:
+    """Fresh registry: unit-gain channels over the P-wide pathloss
+    profile (the same `phy.init_state` the engines use, so the
+    degenerate P == K table starts bit-identical to the legacy
+    per-worker state), zero scores/norms, nothing seen yet."""
+    z = jnp.zeros((population,), jnp.float32)
+    neg1 = jnp.full((population,), -1, jnp.int32)
+    return PopulationTable(phy=comm_phy.init_state(comm, population),
+                           ef_norm=z, score=z,
+                           last_seen=neg1, last_evolved=neg1)
+
+
+def table_specs(population: int) -> PopulationTable:
+    """ShapeDtypeStruct stand-ins for one table (dry-run sharding/
+    pricing on the mesh path without allocating P-sized buffers)."""
+    f32 = lambda: jax.ShapeDtypeStruct((population,), jnp.float32)
+    i32 = lambda: jax.ShapeDtypeStruct((population,), jnp.int32)
+    return PopulationTable(
+        phy=PhyState(h_re=f32(), h_im=f32(), pathloss_db=f32(),
+                     snr_db=f32(), age=i32()),
+        ef_norm=f32(), score=f32(), last_seen=i32(), last_evolved=i32())
+
+
+def table_bytes(table: PopulationTable) -> int:
+    """Total registry footprint in bytes (the O(P)-scalar budget)."""
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(table)))
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling
+# ---------------------------------------------------------------------------
+
+def _policy_logits(table: PopulationTable, policy: str) -> Array:
+    """Per-device selection logits. Rankings use the table's LAST-KNOWN
+    state (a device's score/SNR is as stale as its last participation)
+    — the scheduler cannot observe devices it never talks to."""
+    if policy == "uniform":
+        return jnp.zeros_like(table.score)
+    if policy == "score_weighted":
+        # lower Eq.-5 theta = better device -> higher logit. Standardize
+        # over the seen sub-population; never-seen devices sit at the
+        # seen mean (round 0: all-unseen degrades to uniform).
+        seen = (table.last_seen >= 0).astype(jnp.float32)
+        n = jnp.maximum(seen.sum(), 1.0)
+        mean = (table.score * seen).sum() / n
+        var = (((table.score - mean) ** 2) * seen).sum() / n
+        z = (table.score - mean) / (jnp.sqrt(var) + 1e-6)
+        return jnp.where(seen > 0, -z, 0.0)
+    if policy == "snr_aware":
+        return table.phy.snr_db / _SNR_TEMP_DB
+    raise ValueError(f"unknown cohort policy {policy!r} "
+                     f"(choose from {COHORT_POLICIES})")
+
+
+def sample_cohort(table: PopulationTable, cohort_size: int, policy: str,
+                  key: Array) -> Array:
+    """Draw K distinct device ids from the P-device registry.
+
+    Gumbel-top-k: top_k(logits + Gumbel noise) is an exact
+    without-replacement draw from the softmax of the logits, and it is
+    jittable at P = 1M (one (P,) noise draw + one top_k). The
+    degenerate full-fleet case — population == cohort_size under the
+    uniform policy — returns the identity cohort with NO draw, the
+    anchor of the bit-identity guarantee with the legacy engines."""
+    P = table.score.shape[0]
+    if policy == "uniform" and P == cohort_size:
+        return jnp.arange(cohort_size, dtype=jnp.int32)
+    noisy = _policy_logits(table, policy) + jax.random.gumbel(
+        key, (P,), jnp.float32)
+    _, idx = jax.lax.top_k(noisy, cohort_size)
+    return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# gather (with lazy catch-up) / scatter
+# ---------------------------------------------------------------------------
+
+def gather_phy(comm: CommConfig, table: PopulationTable, idx: Array,
+               round_idx: Array, key: Array) -> PhyState:
+    """Cohort rows -> the K-slot PhyState entering round `round_idx`.
+
+    A stored row was last refreshed by round `last_evolved`'s in-round
+    evolution; entering round t the legacy engine would have evolved it
+    lag = t - 1 - last_evolved more times. The Gauss-Markov recursion
+    telescopes, so those lag idle rounds collapse into one draw
+
+        h <- rho^lag h + sqrt(1 - rho^(2 lag)) CN(0, 1)
+
+    (`phy.lazy_fading_coeffs`) with a per-DEVICE key (fold_in by device
+    id), making the marginal exact at O(K) cost. The delivery age
+    advances by the idle-round count the same way. lag == 0 rows pass
+    through a `jnp.where` guard bitwise untouched — the degenerate
+    full-fleet cohort re-enters exactly the state it scattered."""
+    p = jax.tree.map(lambda x: x[idx], table.phy)
+    age = p.age + (round_idx - 1 - table.last_seen[idx])
+    if comm.fading == "none":
+        return p._replace(age=age)
+    lag = round_idx - 1 - table.last_evolved[idx]
+    rho_d, innov = comm_phy.lazy_fading_coeffs(comm, lag)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, idx)
+    n = jax.vmap(lambda k: jax.random.normal(k, (2,), jnp.float32))(keys)
+    std = jnp.sqrt(0.5).astype(jnp.float32)
+    h_re = rho_d * p.h_re + innov * std * n[:, 0]
+    h_im = rho_d * p.h_im + innov * std * n[:, 1]
+    fresh = lag > 0
+    h_re = jnp.where(fresh, h_re, p.h_re)
+    h_im = jnp.where(fresh, h_im, p.h_im)
+    snr = jnp.where(fresh, comm_phy.instantaneous_snr_db(
+        comm, h_re, h_im, p.pathloss_db), p.snr_db)
+    return PhyState(h_re=h_re, h_im=h_im, pathloss_db=p.pathloss_db,
+                    snr_db=snr, age=age)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("comm", "cohort_size", "policy"))
+def schedule(table: PopulationTable, round_idx: Array, key: Array, *,
+             comm: CommConfig, cohort_size: int, policy: str
+             ) -> tuple[Array, PhyState]:
+    """One round of population scheduling: sample the K-cohort, gather
+    its channel rows with lazy catch-up. Returns (device ids, PhyState
+    for the engine's worker axis)."""
+    skey, ckey = jax.random.split(key)
+    idx = sample_cohort(table, cohort_size, policy, skey)
+    return idx, gather_phy(comm, table, idx, round_idx, ckey)
+
+
+def residual_norms(residual) -> Array:
+    """Per-slot L2 norms of the stacked uplink EF residual — the O(1)-
+    per-device summary the table keeps in place of the O(n) residual."""
+    total = None
+    for x in jax.tree.leaves(residual):
+        sq = (x.astype(jnp.float32) ** 2).sum(
+            axis=tuple(range(1, x.ndim)))
+        total = sq if total is None else total + sq
+    return jnp.sqrt(total)
+
+
+@jax.jit
+def scatter_round(table: PopulationTable, idx: Array, phy: PhyState,
+                  theta: Array, ef_norm: Array, round_idx: Array
+                  ) -> PopulationTable:
+    """Write the cohort's post-round state back: the advanced channel
+    rows (post-evolve, post-advance_age), the round's Eq.-5 scores, the
+    EF-residual norms, and both round markers. Pathloss is static (the
+    device's registry slot) and never rewritten. Sampling is without
+    replacement, so the scatter indices are unique."""
+    stamp = jnp.broadcast_to(round_idx.astype(jnp.int32), idx.shape)
+    up = lambda col, v: col.at[idx].set(v)
+    return PopulationTable(
+        phy=PhyState(h_re=up(table.phy.h_re, phy.h_re),
+                     h_im=up(table.phy.h_im, phy.h_im),
+                     pathloss_db=table.phy.pathloss_db,
+                     snr_db=up(table.phy.snr_db, phy.snr_db),
+                     age=up(table.phy.age, phy.age)),
+        ef_norm=up(table.ef_norm, ef_norm),
+        score=up(table.score, theta),
+        last_seen=up(table.last_seen, stamp),
+        last_evolved=up(table.last_evolved, stamp))

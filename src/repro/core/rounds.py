@@ -78,6 +78,10 @@ class RoundTelemetry(NamedTuple):
     airtime_s: Array          # () uplink airtime (SNR->rate, comm.phy)
     energy_j: Array           # () transmit energy = tx_power * airtime
     mean_snr_db: Array        # () fleet-mean instantaneous received SNR
+    # (K,) int32 device ids seated this round by the population engine
+    # (core/population.py); None on legacy full-fleet runs, so existing
+    # engines/goldens never see the field
+    cohort: Any = None
 
     # pre-refactor field names, kept so existing consumers read the
     # unified record unchanged

@@ -22,7 +22,7 @@ import dataclasses
 from repro.comm.budget import CommConfig
 from repro.core.pso import PsoHyperParams
 from repro.experiments.spec import (AlgoSpec, DataSpec, ExperimentSpec,
-                                    ModelSpec, RunSpec)
+                                    ModelSpec, PopulationSpec, RunSpec)
 
 _SCENARIOS: dict[str, ExperimentSpec] = {}
 
@@ -62,6 +62,10 @@ def describe_scenarios() -> list[tuple[str, str]]:
         else:
             what = (f"{s.model.name} W={s.data.num_workers} "
                     f"steps={s.run.rounds}")
+        if s.fleet.population:
+            what = (f"{s.algo.algorithm}/{s.data.case}/{s.data.dataset} "
+                    f"P={s.fleet.population} K={s.data.num_workers}"
+                    f"/{s.fleet.cohort_policy} R={s.run.rounds}")
         wire = []
         if s.comm.compressor != "identity":
             wire.append(s.comm.compressor)
@@ -177,6 +181,28 @@ register_scenario(ExperimentSpec(
                   hp=_PAPER_HP),
     run=RunSpec(rounds=8),
 ))
+
+# -- sampled-cohort fleets (core/population: P registered, K active) --------
+_FLEET = ExperimentSpec(
+    data=DataSpec(dataset="mnist_like", case="noniid1", num_workers=16,
+                  n_local=128),
+    model=ModelSpec(kind="paper", name="cnn", width_mult=2),
+    algo=AlgoSpec(algorithm="mdsl", tau=0.9, local_epochs=1, batch_size=64,
+                  hp=_PAPER_HP),
+    run=RunSpec(rounds=10),
+)
+register_scenario(dataclasses.replace(
+    _FLEET, name="fleet/million-uniform",
+    fleet=PopulationSpec(population=1_000_000, cohort_size=16,
+                         cohort_policy="uniform")))
+register_scenario(dataclasses.replace(
+    _FLEET, name="fleet/million-score",
+    fleet=PopulationSpec(population=1_000_000, cohort_size=16,
+                         cohort_policy="score_weighted"),
+    # Rayleigh fading so the O(K) lazy catch-up (rho^Δ closed form) is
+    # exercised: resampled devices re-enter with compressed idle rounds
+    comm=CommConfig(channel="awgn", snr_db=10.0, fading="rayleigh",
+                    doppler_rho=0.9)))
 
 # -- mesh smoke runs (production path, reduced archs) -----------------------
 _MESH_HP = PsoHyperParams(learning_rate=3e-3, velocity_clip=1.0)

@@ -17,6 +17,7 @@ emit byte-identical metrics (modulo timing) on the default path.
 from __future__ import annotations
 
 import contextlib
+import functools
 import json
 import sys
 import time
@@ -186,6 +187,100 @@ def _prepare_paper(spec: ExperimentSpec) -> Prepared:
                          "cfg": cfg, "test_accuracy": test_accuracy})
 
 
+class _PopulationState(NamedTuple):
+    """Engine state wrapped by the population scheduler: the K-cohort
+    engine state, the O(P)-scalar device registry, the device ids
+    holding the K slots, and the host round counter driving the lazy
+    catch-up arithmetic."""
+    inner: Any               # SwarmTrainState over the K cohort slots
+    table: Any               # population.PopulationTable over P devices
+    cohort: jax.Array        # (K,) int32 device ids seated in the slots
+    t: int                   # next round index (host-side)
+
+    @property
+    def global_params(self):
+        return self.inner.global_params
+
+
+def _wrap_population(prep: Prepared) -> Prepared:
+    """Lift a prepared K-worker paper run into a P-device fleet.
+
+    Per round: fold POP_SALT off the round key (the inner engine's
+    legacy key chain is never advanced), sample the K-cohort, gather
+    its channel rows with lazy fading catch-up, reseat changed slots
+    (fresh devices join at the current global model with zero velocity
+    and reset personal bests — `pso.init_worker_state` semantics — and
+    a zero uplink EF residual), run the inner round UNCHANGED, then
+    scatter the cohort's post-round scalars back into the table. Model
+    state stays O(K); the registry stays O(P) scalars.
+
+    Degenerate anchor: population == cohort_size under the uniform
+    policy samples the identity cohort, the reseat mask is all-False
+    (every `jnp.where` returns its stored operand bitwise), and the
+    gather's lag-0 guards pass the scattered channel rows back
+    untouched — such runs are bit-identical to the unwrapped engine.
+
+    Known limitation (documented in docs/population.md): worker data
+    partitions and the eta non-iid degrees are SLOT-resident, not
+    device-resident — device p seated in slot k trains on partition k.
+    The fleet axis models channels, schedules, and staleness, not P
+    distinct datasets."""
+    from repro.core import population as pop
+    from repro.core.pso import WorkerState
+
+    spec = prep.spec
+    f, comm = spec.fleet, spec.comm
+    K = spec.data.num_workers
+    inner_step = prep.step
+    schedule = functools.partial(pop.schedule, comm=comm, cohort_size=K,
+                                 policy=f.cohort_policy)
+
+    @jax.jit
+    def reseat(inner, changed, phy):
+        def mix(fresh, old):
+            return jax.tree.map(
+                lambda fl, ol: jnp.where(
+                    changed.reshape((-1,) + (1,) * (fl.ndim - 1)), fl, ol),
+                fresh, old)
+        g = inner.global_params
+        bcast = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (K,) + x.shape), g)
+        inf = jnp.full((K,), jnp.inf, jnp.float32)
+        fresh_workers = WorkerState(
+            params=bcast, velocity=jax.tree.map(jnp.zeros_like, bcast),
+            best_params=bcast, best_loss=inf, prev_loss=inf)
+        return inner._replace(
+            workers=mix(fresh_workers, inner.workers),
+            residual=mix(jax.tree.map(jnp.zeros_like, inner.residual),
+                         inner.residual),
+            phy=phy)
+
+    @jax.jit
+    def scatter(table, idx, inner, theta, round_idx):
+        return pop.scatter_round(
+            table, idx, inner.phy, theta,
+            pop.residual_norms(inner.residual), round_idx)
+
+    def step(state, key):
+        t = jnp.int32(state.t)
+        pkey = jax.random.fold_in(key, pop.POP_SALT)
+        idx, phy = schedule(state.table, t, pkey)
+        inner = reseat(state.inner, idx != state.cohort, phy)
+        inner, metrics, key = inner_step(inner, key)
+        table = scatter(state.table, idx, inner, metrics.theta, t)
+        return (_PopulationState(inner=inner, table=table, cohort=idx,
+                                 t=state.t + 1),
+                metrics._replace(cohort=idx), key)
+
+    table = pop.init_table(comm, f.population)
+    state0 = _PopulationState(
+        inner=prep.state, table=table,
+        cohort=jnp.arange(K, dtype=jnp.int32), t=0)
+    aux = dict(prep.aux, population=f.population,
+               table_bytes=pop.table_bytes(table))
+    return prep._replace(state=state0, step=step, aux=aux)
+
+
 def _round_window(profiler, t: int):
     """The per-round profiler window (nullcontext when not profiling)."""
     return profiler.round(t) if profiler is not None \
@@ -213,6 +308,10 @@ def _run_paper(prep: Prepared, verbose: bool, em=NULL,
               "uploaded_params": [], "bytes_up": [], "bytes_down": [],
               "airtime_s": [], "energy_j": [], "mean_snr_db": [],
               "round_time_s": []}
+    if spec.fleet.population:
+        record["population"] = spec.fleet.population
+        record["cohort_size"] = d.num_workers
+        record["cohort_policy"] = spec.fleet.cohort_policy
 
     metrics = None
     for t in range(r.rounds):
@@ -244,8 +343,10 @@ def _run_paper(prep: Prepared, verbose: bool, em=NULL,
                "energy_j": float(metrics.energy_j),
                "mean_snr_db": float(metrics.mean_snr_db),
                "round_time_s": round(time.time() - t0, 2)}
+        if getattr(metrics, "cohort", None) is not None:
+            row["cohort"] = np.asarray(metrics.cohort).tolist()
         for k, v in row.items():
-            record[k].append(v)
+            record.setdefault(k, []).append(v)
         em.round(t, row)
         if verbose and (t % r.log_every == 0 or t == r.rounds - 1):
             em.log(f"[{a.algorithm}/{d.case}/{d.dataset}] "
@@ -393,8 +494,12 @@ def build(spec: ExperimentSpec) -> Prepared:
     """Validate + materialize a spec into data/model/state and one
     uniform `step` callable, without running any rounds."""
     spec = spec.validate()
-    return (_prepare_paper(spec) if spec.model.kind == "paper"
-            else _prepare_mesh(spec))
+    if spec.model.kind != "paper":
+        return _prepare_mesh(spec)
+    prep = _prepare_paper(spec)
+    if spec.fleet.population:
+        prep = _wrap_population(prep)
+    return prep
 
 
 def _obs_emitter(spec: ExperimentSpec, engine: str):
@@ -444,6 +549,9 @@ def run(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
         em.run_start(scenario=spec.name, seed=spec.run.seed, engine=engine,
                      num_workers=spec.data.num_workers,
                      rounds=spec.run.rounds, n_params=prep.n_params,
+                     population=spec.fleet.population or 0,
+                     cohort=(spec.data.num_workers
+                             if spec.fleet.population else 0),
                      spec=to_dict(spec))
         if o.stage_spans:
             tracer = obs_trace.StageTracer(em, phase="trace")

@@ -10,6 +10,7 @@ first-class representation: a frozen dataclass tree
       ├── model: ModelSpec   paper cnn-resnet+width  OR  mesh arch+reduced
       ├── algo:  AlgoSpec    algorithm / tau / epochs / PsoHyperParams
       ├── comm:  CommConfig  the existing repro.comm wire config
+      ├── fleet: PopulationSpec  P-device registry / per-round K-cohort
       └── run:   RunSpec     rounds / seed / log cadence / artifact path
 
 with three guarantees every entry point relies on:
@@ -31,6 +32,7 @@ import typing
 from typing import Any, Optional
 
 from repro.comm.budget import CommConfig
+from repro.core.population import COHORT_POLICIES
 from repro.core.pso import PsoHyperParams
 
 SPEC_VERSION = 1
@@ -84,6 +86,19 @@ class AlgoSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """The registered-device population behind the per-round cohort
+    (core/population.py). `population=None` keeps the legacy full-fleet
+    engines (all of data.num_workers train every round). With
+    `population=P`, the run models P registered devices at O(P)
+    persistent scalars and seats a K = data.num_workers cohort per
+    round; `cohort_policy` picks who."""
+    population: Optional[int] = None    # P registered devices (None = off)
+    cohort_size: Optional[int] = None   # K; must equal data.num_workers
+    cohort_policy: str = "uniform"      # see population.COHORT_POLICIES
+
+
+@dataclasses.dataclass(frozen=True)
 class ObsConfig:
     """The telemetry bus (repro.obs). Disabled by default: a disabled
     run pays only no-op emitter calls and stays bit-identical to the
@@ -115,6 +130,7 @@ class ExperimentSpec:
     model: ModelSpec = ModelSpec()
     algo: AlgoSpec = AlgoSpec()
     comm: CommConfig = CommConfig()
+    fleet: PopulationSpec = PopulationSpec()
     run: RunSpec = RunSpec()
 
     # -- validation ------------------------------------------------------
@@ -158,11 +174,48 @@ class ExperimentSpec:
                 raise ValueError(f"{fname} must be >= 1, got {v}")
         if not 0.0 <= a.tau <= 1.0:
             raise ValueError(f"algo.tau must be in [0, 1], got {a.tau}")
-        if not 0 <= self.comm.byzantine < d.num_workers:
+        # -- fleet: the population/cohort split ---------------------------
+        f = self.fleet
+        K = d.num_workers                  # per-round cohort size
+        if f.cohort_policy not in COHORT_POLICIES:
+            raise ValueError(f"unknown fleet.cohort_policy "
+                             f"{f.cohort_policy!r} (choose from "
+                             f"{COHORT_POLICIES})")
+        if f.cohort_size is not None and f.cohort_size != K:
             raise ValueError(
-                f"comm.byzantine must be in [0, data.num_workers), got "
-                f"{self.comm.byzantine} of {d.num_workers} workers — an "
-                f"all-adversarial fleet trains on attacker updates only")
+                f"fleet.cohort_size ({f.cohort_size}) must equal "
+                f"data.num_workers ({K}) — the cohort seats the engine's "
+                f"worker axis; size the round with data.num_workers and "
+                f"the registry with fleet.population")
+        if f.population is not None:
+            if m.kind != "paper":
+                raise ValueError(
+                    "fleet.population drives the paper engine's sampled-"
+                    "cohort wrapper; the mesh path only shards the "
+                    "population table (launch/steps.population_specs) — "
+                    "unset fleet.population for mesh runs")
+            if f.population < K:
+                raise ValueError(
+                    f"fleet.population ({f.population}) must be >= the "
+                    f"per-round cohort size K = data.num_workers ({K})")
+        # -- comm robustness bounds: against the per-round cohort size K,
+        # not the registry size P (only K uploads aggregate per round) --
+        P = f.population or K
+        if not 0 <= self.comm.byzantine < K:
+            raise ValueError(
+                f"comm.byzantine must be in [0, K) where K is the "
+                f"per-round cohort size: got byzantine="
+                f"{self.comm.byzantine} against K={K} (population P={P}) "
+                f"— an all-adversarial cohort trains on attacker updates "
+                f"only")
+        if (self.comm.aggregator == "trimmed_mean" and self.comm.byzantine
+                and int(self.comm.trim_ratio * K) < self.comm.byzantine):
+            raise ValueError(
+                f"comm.trim_ratio={self.comm.trim_ratio} trims only "
+                f"floor(trim_ratio*K) = {int(self.comm.trim_ratio * K)} "
+                f"of the K={K} cohort seats per end (population P={P}), "
+                f"fewer than comm.byzantine={self.comm.byzantine} "
+                f"adversaries — raise trim_ratio or shrink the attack")
         if d.alpha is not None:
             if d.alpha <= 0.0:
                 raise ValueError(f"data.alpha must be > 0, got {d.alpha}")
@@ -183,7 +236,7 @@ class ExperimentSpec:
 
 # struct classes reachable from an ExperimentSpec, keyed for from_dict
 _STRUCTS = (ExperimentSpec, DataSpec, ModelSpec, AlgoSpec, RunSpec,
-            ObsConfig, CommConfig, PsoHyperParams)
+            ObsConfig, PopulationSpec, CommConfig, PsoHyperParams)
 
 
 def _is_namedtuple(obj: Any) -> bool:

@@ -7,8 +7,23 @@ which never materializes the C dense reconstructions the legacy route
 decodes first.
 
 Dispatch mirrors quant_pack/ops.py: compiled pallas on TPU, the
-bit-identical ref on CPU, reported via `runtime.note_dispatch`."""
+bit-identical ref on CPU, reported via `runtime.note_dispatch`.
+
+Fleets past the kernel's VMEM budget (the dequantized block is a
+(C, BLOCK_ROWS, 128) f32 VMEM value, so C <~ 64 fits v5e at the default
+block) take a two-stage tree for the mean: each contiguous chunk of
+<= `worker_cap` workers produces a masked weighted partial SUM through
+the SAME dispatch route (kernel or ref), the partials add in chunk
+order, and ONE divide by the fleet-wide delivered weight finishes Eq. 7.
+The chunking decision depends only on C, and both routes chunk
+identically, so kernel-vs-ref stays bit-identical at every C; C <=
+worker_cap keeps the legacy single-stage call (all existing pins
+unchanged). Robust aggregators don't tree (order statistics don't
+decompose) — their C <~ 32 sorting-network bound stands.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -17,12 +32,18 @@ from repro.kernels import runtime
 from repro.kernels.wire_agg.ref import wire_agg_ref
 from repro.kernels.wire_agg.wire_agg import AGGREGATORS, wire_agg_2d
 
+# max workers per single-stage mean call: C * 128 KiB of dequantized
+# f32 block must fit VMEM (wire_agg.py header) — past this the mean
+# takes the two-stage tree
+MEAN_WORKER_CAP = 64
+
 
 def wire_aggregate(packed: jax.Array, scales: jax.Array, mask: jax.Array,
                    *, shape: tuple[int, ...], bits: int = 8,
                    aggregator: str = "mean", trim_ratio: float = 0.1,
                    weights: jax.Array | None = None,
-                   interpret: bool | None = None) -> jax.Array:
+                   interpret: bool | None = None,
+                   worker_cap: int = MEAN_WORKER_CAP) -> jax.Array:
     """Aggregate C packed payloads of one leaf into a dense f32 delta.
 
     packed: (C, rows, 128) int8 / (C, rows/2, 128) uint8 (stacked
@@ -31,17 +52,30 @@ def wire_aggregate(packed: jax.Array, scales: jax.Array, mask: jax.Array,
     weights the sum and the denominator, robust aggregators scale the
     sorted values). Returns the (*shape,) f32 aggregate —
     `channel.receive`'s `agg` term, before the += into the global
-    params. interpret=None dispatches by backend."""
+    params. interpret=None dispatches by backend. `worker_cap` bounds
+    the per-call worker axis for the mean (two-stage tree past it)."""
     assert aggregator in AGGREGATORS, aggregator
     if interpret is None:
         interpret = runtime.interpret_default()
     C = packed.shape[0]
-    runtime.note_dispatch("wire_agg", interpret, bits=bits,
-                          aggregator=aggregator, workers=C)
     mask2 = mask.astype(jnp.float32).reshape(C, 1)
     w2 = (jnp.ones((C, 1), jnp.float32) if weights is None
           else weights.astype(jnp.float32).reshape(C, 1))
-    if interpret:
+    chunked = aggregator == "mean" and C > worker_cap
+    runtime.note_dispatch(
+        "wire_agg", interpret, bits=bits, aggregator=aggregator, workers=C,
+        **({"chunks": -(-C // worker_cap)} if chunked else {}))
+    if chunked:
+        route = (wire_agg_ref if interpret
+                 else functools.partial(wire_agg_2d, interpret=False))
+        parts = [route(packed[g0:g0 + worker_cap],
+                       scales[g0:g0 + worker_cap],
+                       mask2[g0:g0 + worker_cap], w2[g0:g0 + worker_cap],
+                       bits=bits, aggregator="sum", trim_ratio=trim_ratio)
+                 for g0 in range(0, C, worker_cap)]
+        s = functools.reduce(jnp.add, parts)    # fixed chunk order
+        x2 = s / jnp.maximum((mask2 * w2).sum(), 1.0)
+    elif interpret:
         x2 = wire_agg_ref(packed, scales, mask2, w2, bits=bits,
                           aggregator=aggregator, trim_ratio=trim_ratio)
     else:

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels.quant_pack.quant_pack import (BLOCK_ROWS,
                                                  _unpack_nibbles)
-from repro.kernels.wire_agg.wire_agg import AGGREGATORS
+from repro.kernels.wire_agg.wire_agg import _TREE_MODES
 
 
 def wire_agg_ref(packed: jax.Array, scales: jax.Array, mask: jax.Array,
@@ -29,7 +29,7 @@ def wire_agg_ref(packed: jax.Array, scales: jax.Array, mask: jax.Array,
     (rows, 128) f32 aggregate delta."""
     C = packed.shape[0]
     lanes = packed.shape[2]
-    assert aggregator in AGGREGATORS, aggregator
+    assert aggregator in _TREE_MODES, aggregator
     if bits == 8:
         rows = packed.shape[1]
         q = packed.astype(jnp.float32)
@@ -45,9 +45,11 @@ def wire_agg_ref(packed: jax.Array, scales: jax.Array, mask: jax.Array,
     qb = q.reshape(C, nb, block_rows, lanes)
     d = (qb * scales[:, :, None, None]).reshape(C, rows, lanes)
 
-    if aggregator == "mean":
+    if aggregator in ("mean", "sum"):
         mw = mask * weights                            # (C, 1)
         s = (mw[:, :, None] * d).sum(axis=0)
+        if aggregator == "sum":     # tree partial: divide deferred
+            return s
         return s / jnp.maximum(mw.sum(), 1.0)
 
     # robust path: verbatim channel._robust_receive math on the stacked

@@ -43,6 +43,11 @@ _LANES = 128
 
 AGGREGATORS = ("mean", "median", "trimmed_mean")
 
+# internal two-stage mode (ops.wire_aggregate tree route): the masked
+# weighted partial SUM of one worker chunk, no divide — chunk partials
+# add associatively, the caller divides once by the fleet-wide weight
+_TREE_MODES = AGGREGATORS + ("sum",)
+
 
 def _dequant_stack(packed: jax.Array, scales: jax.Array,
                    bits: int) -> jax.Array:
@@ -77,9 +82,11 @@ def _aggregate_block(d: jax.Array, mask: jax.Array, weights: jax.Array,
     mask/weights (C, 1) f32 -> (B, 128) f32 aggregate. Mirrors
     channel.receive / channel._robust_receive operation-for-operation so
     outputs are bit-identical at weights=1 (the engine route)."""
-    if aggregator == "mean":
+    if aggregator in ("mean", "sum"):
         mw = mask * weights
         s = (mw[:, :, None] * d).sum(axis=0)
+        if aggregator == "sum":     # tree partial: divide deferred
+            return s
         return s / jnp.maximum(mw.sum(), 1.0)
 
     k = mask.sum().astype(jnp.int32)
@@ -131,7 +138,7 @@ def wire_agg_2d(packed: jax.Array, scales: jax.Array, mask: jax.Array,
     rows = packed.shape[1] * (2 if bits == 4 else 1)
     assert lanes == _LANES and rows % block_rows == 0, packed.shape
     assert bits in (8, 4), bits
-    assert aggregator in AGGREGATORS, aggregator
+    assert aggregator in _TREE_MODES, aggregator
     nb = rows // block_rows
     assert scales.shape == (C, nb), (scales.shape, C, nb)
     assert mask.shape == weights.shape == (C, 1), (mask.shape,

@@ -183,11 +183,14 @@ def _shard_batch_specs(batch: dict, rules: ShardingRules, mesh: Mesh,
 
 def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      algorithm: str = "mdsl",
-                     comm: Optional[CommConfig] = None) -> BuiltStep:
+                     comm: Optional[CommConfig] = None,
+                     population: int = 0) -> BuiltStep:
     """The M-DSL communication round as one jitted SPMD program. `comm`
     threads the wire config (compression / channel / aggregator /
     downlink) into the mesh round, so comm scenarios lower and cost out
-    at 512-device scale exactly like the defaults."""
+    at 512-device scale exactly like the defaults. `population > 0`
+    prices a P-device registry next to the step (population_specs) and
+    reports its sharded footprint in the meta."""
     cfg = _prep_cfg(cfg)
     rules = train_rules(cfg, mesh)
     worker_axes, W = swarm_layout(cfg, mesh)
@@ -254,9 +257,38 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                  out_shardings=(state_shardings, info_sh),
                  donate_argnums=(0,))
     args = (state_shapes, specs["batch"], specs["eval_batch"], specs["key"])
-    return BuiltStep(fn=fn, args=args, rules=rules, cfg=cfg,
-                     meta={"W": W, "worker_axes": worker_axes,
-                           "algorithm": algorithm})
+    meta = {"W": W, "worker_axes": worker_axes, "algorithm": algorithm}
+    if population:
+        _, _, pop_meta = population_specs(dcfg.comm, population, mesh,
+                                          worker_axes)
+        meta["population"] = population
+        meta["population_table_bytes"] = pop_meta["table_bytes"]
+        meta["population_bytes_per_shard"] = pop_meta["bytes_per_shard"]
+    return BuiltStep(fn=fn, args=args, rules=rules, cfg=cfg, meta=meta)
+
+
+def population_specs(comm: CommConfig, population: int, mesh: Mesh,
+                     worker_axes: tuple[str, ...]
+                     ) -> tuple[Any, Any, dict]:
+    """Dry-run shapes + shardings for a P-device population table on a
+    mesh (core/population.py). The table is nine (P,) scalar columns, so
+    it shards 1-D over the worker axes like the cohort's phy/eta vectors
+    — 36 bytes/device split W ways, never an O(P) model pytree. Returns
+    (ShapeDtypeStruct tree, NamedSharding tree, meta) where meta prices
+    the footprint per host."""
+    from repro.core import population as pop
+    specs = pop.table_specs(population)
+    wspec = (tuple(worker_axes) if len(worker_axes) != 1 else worker_axes[0]
+             ) if worker_axes else None
+    vec = NamedSharding(mesh, P(wspec))
+    shardings = jax.tree.map(lambda _: vec, specs)
+    total = sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(specs))
+    W = 1
+    for a in worker_axes:
+        W *= mesh.shape[a]
+    return specs, shardings, {
+        "population": population, "table_bytes": total,
+        "bytes_per_shard": total // max(W, 1), "worker_axes": worker_axes}
 
 
 def _serve_cache_shapes(model: Transformer, cfg: ArchConfig, batch: int,

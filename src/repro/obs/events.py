@@ -86,6 +86,9 @@ class RunStart(Event):
     num_workers: int = 0
     rounds: int = 0
     n_params: int = 0
+    population: int = 0              # registered fleet size (0 = no
+    #                                  population engine: full fleet)
+    cohort: int = 0                  # active devices per round (0 = all)
     schema: int = EVENT_SCHEMA
     wall_time: float = 0.0           # unix epoch at start (for humans)
     spec: Optional[dict] = None      # full ExperimentSpec (to_dict)

@@ -30,8 +30,15 @@ def tiny(spec: ExperimentSpec) -> ExperimentSpec:
     ovr = TINY_PAPER if spec.model.kind == "paper" else TINY_MESH
     spec = override(spec, *ovr)
     # keep byzantine fleets consistent with the shrunk worker count
+    # (validate() bounds byzantine and floor(trim_ratio*K) against the
+    # shrunk per-round cohort K=4)
     if spec.comm.byzantine:
         spec = override(spec, "comm.byzantine=1")
+        if spec.comm.aggregator == "trimmed_mean":
+            spec = override(spec, "comm.trim_ratio=0.3")
+    # shrink fleet presets with the cohort: P=64 registered, K=4 active
+    if spec.fleet.population:
+        spec = override(spec, "fleet.population=64", "fleet.cohort_size=4")
     return spec
 
 

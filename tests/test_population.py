@@ -1,0 +1,307 @@
+"""Population/cohort engine (core/population.py + the runner wrapper).
+
+Pins the three load-bearing properties:
+  * degenerate anchor — population == cohort_size under the uniform
+    policy reproduces the legacy full-fleet run bit-for-bit (the same
+    guarantee the golden pins give the engines, extended through the
+    gather/reseat/scatter seam);
+  * sampling — every policy returns a valid K-subset of [0, P), and
+    the weighted policies order as documented (score_weighted prefers
+    low Eq.-5 theta, snr_aware prefers high last-known SNR);
+  * lazy fading — the closed-form rho^Δ catch-up matches the per-round
+    Gauss-Markov recursion's coefficients and preserves unit power.
+"""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import phy as comm_phy
+from repro.comm.budget import CommConfig
+from repro.core import population as pop
+from repro.experiments.registry import get_scenario
+from repro.experiments.runner import build, run
+from repro.experiments.spec import override
+
+KEY = jax.random.PRNGKey(0)
+
+# record keys whose histories must match exactly between a legacy run
+# and its degenerate population-wrapped twin
+_EXACT_KEYS = ("acc", "global_loss", "selected", "delivered",
+               "uploaded_params", "bytes_up", "bytes_down", "airtime_s",
+               "energy_j", "mean_snr_db")
+
+
+def _records_bitwise(spec):
+    legacy = run(spec, verbose=False).record
+    K = spec.data.num_workers
+    wrapped = run(override(spec, f"fleet.population={K}",
+                           f"fleet.cohort_size={K}"),
+                  verbose=False).record
+    for k in _EXACT_KEYS:
+        assert legacy[k] == wrapped[k], (k, legacy[k], wrapped[k])
+    # the wrapped run reports its fleet shape + the identity cohorts
+    assert wrapped["population"] == K
+    assert wrapped["cohort_size"] == K
+    assert wrapped["cohort"] == [list(range(K))] * spec.run.rounds
+    assert "cohort" not in legacy
+
+
+class TestDegenerateBitIdentity:
+    def test_quickstart(self):
+        """Default wire (ideal channel, no fading): the reseat mask is
+        all-False and the table round-trips the phy rows bitwise."""
+        _records_bitwise(override(get_scenario("quickstart"),
+                                  "run.rounds=2"))
+
+    def test_phy_heavy_wire(self):
+        """Rayleigh fading + composite channel + outage + int8 uplink:
+        the lag-0 guards must pass the evolved channel state through the
+        table untouched — every stochastic wire stage stays on the
+        legacy key chain."""
+        spec = override(get_scenario("rayleigh-outage"),
+                        "data.num_workers=4", "data.n_local=64",
+                        "model.width_mult=2", "algo.local_epochs=1",
+                        "run.rounds=2", "comm.compressor=int8")
+        _records_bitwise(spec)
+
+
+class TestSampling:
+    def _table(self, P, comm=CommConfig()):
+        return pop.init_table(comm, P)
+
+    @hp.given(st.integers(2, 200), st.integers(1, 16),
+              st.sampled_from(pop.COHORT_POLICIES), st.integers(0, 2**20))
+    @hp.settings(max_examples=20, deadline=None)
+    def test_valid_k_subset(self, P, K, policy, seed):
+        hp.assume(K <= P)
+        idx = pop.sample_cohort(self._table(P), K, policy,
+                                jax.random.fold_in(KEY, seed))
+        a = np.asarray(idx)
+        assert a.shape == (K,) and a.dtype == np.int32
+        assert len(set(a.tolist())) == K
+        assert (a >= 0).all() and (a < P).all()
+
+    def test_degenerate_identity_no_draw(self):
+        idx = pop.sample_cohort(self._table(16), 16, "uniform", KEY)
+        np.testing.assert_array_equal(np.asarray(idx), np.arange(16))
+
+    def _membership_counts(self, table, policy, K, draws=64):
+        lo = hi = 0
+        P = table.score.shape[0]
+        for s in range(draws):
+            idx = np.asarray(pop.sample_cohort(
+                table, K, policy, jax.random.fold_in(KEY, s)))
+            lo += int((idx < P // 2).sum())
+            hi += int((idx >= P // 2).sum())
+        return lo, hi
+
+    def test_score_weighted_prefers_low_theta(self):
+        """Devices whose last Eq.-5 theta was low (= better) must win
+        seats more often than the high-theta half."""
+        P = 64
+        t = self._table(P)
+        score = jnp.where(jnp.arange(P) < P // 2, 0.0, 10.0)
+        t = t._replace(score=score,
+                       last_seen=jnp.zeros((P,), jnp.int32))
+        lo, hi = self._membership_counts(t, "score_weighted", K=8)
+        assert lo > 2 * hi, (lo, hi)
+
+    def test_score_weighted_unseen_degrades_to_uniform(self):
+        """Round 0 (nothing seen): the standardized logits are all zero,
+        so the draw is uniform — both halves get seats."""
+        lo, hi = self._membership_counts(self._table(64), "score_weighted",
+                                         K=8)
+        assert lo > 0 and hi > 0
+        assert 0.5 < lo / hi < 2.0, (lo, hi)
+
+    def test_snr_aware_prefers_high_snr(self):
+        P = 64
+        t = self._table(P)
+        snr = jnp.where(jnp.arange(P) < P // 2, -10.0, 10.0)
+        t = t._replace(phy=t.phy._replace(snr_db=snr.astype(jnp.float32)))
+        lo, hi = self._membership_counts(t, "snr_aware", K=8)
+        assert hi > 2 * lo, (lo, hi)
+
+
+class TestLazyFading:
+    _COMM = CommConfig(fading="rayleigh", doppler_rho=0.9)
+
+    def test_zero_lag_is_identity(self):
+        rho_d, innov = comm_phy.lazy_fading_coeffs(
+            self._COMM, jnp.zeros((4,), jnp.int32))
+        np.testing.assert_array_equal(np.asarray(rho_d), 1.0)
+        np.testing.assert_array_equal(np.asarray(innov), 0.0)
+
+    def test_single_step_matches_evolve(self):
+        """Δ=1 reproduces the per-round recursion's (rho, sqrt(1-rho²))
+        exactly — the same coefficients `phy.evolve` applies."""
+        rho = self._COMM.doppler_rho
+        rho_d, innov = comm_phy.lazy_fading_coeffs(
+            self._COMM, jnp.ones((1,), jnp.int32))
+        np.testing.assert_allclose(float(rho_d[0]), rho, rtol=1e-6)
+        np.testing.assert_allclose(float(innov[0]),
+                                   np.sqrt(1.0 - rho * rho), rtol=1e-6)
+
+    @hp.given(st.integers(0, 500), st.floats(0.0, 1.0))
+    @hp.settings(max_examples=20, deadline=None)
+    def test_unit_power_preserved(self, lag, rho):
+        """rho_d² + innov² = 1 for every Δ: catching up keeps E|h|² = 1
+        (the closed form telescopes the variance exactly)."""
+        cfg = CommConfig(fading="rayleigh", doppler_rho=rho)
+        rho_d, innov = comm_phy.lazy_fading_coeffs(
+            cfg, jnp.asarray([lag], jnp.int32))
+        np.testing.assert_allclose(
+            float(rho_d[0]) ** 2 + float(innov[0]) ** 2, 1.0, atol=1e-5)
+
+    def test_gather_lag0_passthrough_bitwise(self):
+        """A row whose stored state is current (lag 0) re-enters the
+        cohort bit-identical — the degenerate anchor's key guard."""
+        P = 8
+        table = pop.init_table(self._COMM, P)
+        # pretend round 0 just scattered: markers at 0, entering round 1
+        table = table._replace(
+            last_seen=jnp.zeros((P,), jnp.int32),
+            last_evolved=jnp.zeros((P,), jnp.int32))
+        idx = jnp.arange(P, dtype=jnp.int32)
+        got = pop.gather_phy(self._COMM, table, idx,
+                             jnp.int32(1), KEY)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(table.phy)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_gather_advances_age_by_idle_rounds(self):
+        comm = CommConfig()      # fading none: pure age arithmetic
+        table = pop.init_table(comm, 4)
+        table = table._replace(
+            last_seen=jnp.asarray([0, 2, 4, 4], jnp.int32),
+            phy=table.phy._replace(age=jnp.asarray([1, 0, 3, 0],
+                                                   jnp.int32)))
+        got = pop.gather_phy(comm, table, jnp.arange(4, dtype=jnp.int32),
+                             jnp.int32(5), KEY)
+        np.testing.assert_array_equal(np.asarray(got.age), [5, 2, 3, 0])
+
+
+class TestScatterRoundtrip:
+    def test_scatter_then_gather_roundtrips(self):
+        """What a cohort writes back is exactly what it reads out next
+        round (lag 0), for a non-identity cohort."""
+        comm = CommConfig(fading="rayleigh", doppler_rho=0.8)
+        P, K = 32, 4
+        table = pop.init_table(comm, P)
+        idx = jnp.asarray([3, 17, 8, 29], jnp.int32)
+        k1, k2 = jax.random.split(KEY)
+        phy = comm_phy.PhyState(
+            h_re=jax.random.normal(k1, (K,)),
+            h_im=jax.random.normal(k2, (K,)),
+            pathloss_db=table.phy.pathloss_db[idx],
+            snr_db=jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32),
+            age=jnp.asarray([0, 1, 0, 2], jnp.int32))
+        theta = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+        efn = jnp.asarray([1.0, 0.0, 2.0, 0.5], jnp.float32)
+        t2 = pop.scatter_round(table, idx, phy, theta, efn, jnp.int32(3))
+        got = pop.gather_phy(comm, t2, idx, jnp.int32(4), KEY)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(phy)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(t2.score[idx]),
+                                      np.asarray(theta))
+        np.testing.assert_array_equal(np.asarray(t2.ef_norm[idx]),
+                                      np.asarray(efn))
+        # untouched devices keep their init rows
+        rest = np.setdiff1d(np.arange(P), np.asarray(idx))
+        assert (np.asarray(t2.last_seen)[rest] == -1).all()
+
+    def test_residual_norms(self):
+        res = {"w": jnp.asarray([[3.0, 4.0], [0.0, 0.0]]),
+               "b": jnp.asarray([[0.0], [12.0]])}
+        got = pop.residual_norms(res)
+        np.testing.assert_allclose(np.asarray(got), [5.0, 12.0],
+                                   rtol=1e-6)
+
+
+class TestTableFootprint:
+    def test_o_p_scalars_only(self):
+        """The 1M-device registry is nine (P,) columns — 36 B/device,
+        36 MB total — never an O(P) model pytree."""
+        specs = pop.table_specs(1_000_000)
+        leaves = jax.tree.leaves(specs)
+        assert len(leaves) == 9
+        assert all(s.shape == (1_000_000,) for s in leaves)
+        total = sum(s.size * s.dtype.itemsize for s in leaves)
+        assert total == 36_000_000
+        small = pop.init_table(CommConfig(), 128)
+        assert pop.table_bytes(small) == 128 * 36
+
+
+class TestMeshPopulationSpecs:
+    def test_population_specs_shard_over_workers(self):
+        from jax.sharding import Mesh
+
+        from repro.launch.steps import population_specs
+        dev = np.array(jax.devices()[:1]).reshape(1, 1)
+        mesh = Mesh(dev, ("data", "model"))
+        specs, shardings, meta = population_specs(
+            CommConfig(), 10_000, mesh, ("data",))
+        assert meta["population"] == 10_000
+        assert meta["table_bytes"] == 10_000 * 36
+        assert meta["bytes_per_shard"] == meta["table_bytes"]  # 1 device
+        for s, sh in zip(jax.tree.leaves(specs), jax.tree.leaves(shardings)):
+            assert s.shape == (10_000,)
+            assert sh.spec == jax.sharding.PartitionSpec("data")
+
+
+class TestSpecValidation:
+    def test_cohort_size_must_match_num_workers(self):
+        spec = override(get_scenario("quickstart"), "fleet.population=100",
+                        "fleet.cohort_size=4")
+        with pytest.raises(ValueError, match="cohort_size"):
+            spec.validate()
+
+    def test_population_must_cover_cohort(self):
+        spec = override(get_scenario("quickstart"), "fleet.population=4")
+        with pytest.raises(ValueError, match="population"):
+            spec.validate()
+
+    def test_mesh_specs_reject_population(self):
+        spec = override(get_scenario("mesh/smollm-smoke"),
+                        "fleet.population=100")
+        with pytest.raises(ValueError, match="mesh"):
+            spec.validate()
+
+    def test_byzantine_bound_names_cohort_not_population(self):
+        """A huge population cannot dilute the Byzantine bound: what
+        matters is the K cohort seats the adversaries can flood."""
+        spec = override(get_scenario("quickstart"), "fleet.population=1000",
+                        "comm.byzantine=8")     # == K: all seats hostile
+        with pytest.raises(ValueError, match=r"K=8.*P=1000"):
+            spec.validate()
+
+
+class TestSampledFleetRun:
+    def test_small_population_run_end_to_end(self):
+        """P=64 > K=8 with the score policy: finite metrics, distinct
+        cohorts over rounds, table telemetry in the record."""
+        spec = override(get_scenario("quickstart"), "fleet.population=64",
+                        "fleet.cohort_size=8",
+                        "fleet.cohort_policy=score_weighted",
+                        "run.rounds=3")
+        rec = run(spec, verbose=False).record
+        assert np.isfinite(rec["global_loss"]).all()
+        assert np.isfinite(rec["acc"]).all()
+        cohorts = rec["cohort"]
+        assert len(cohorts) == 3
+        for c in cohorts:
+            assert len(c) == 8 and len(set(c)) == 8
+            assert all(0 <= i < 64 for i in c)
+        assert rec["population"] == 64
+
+    def test_build_exposes_table(self):
+        spec = override(get_scenario("quickstart"), "fleet.population=64",
+                        "fleet.cohort_size=8")
+        prep = build(spec)
+        assert prep.aux["population"] == 64
+        assert prep.aux["table_bytes"] == 64 * 36
+        assert prep.state.table.score.shape == (64,)
+        np.testing.assert_array_equal(np.asarray(prep.state.cohort),
+                                      np.arange(8))

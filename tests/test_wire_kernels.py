@@ -315,3 +315,91 @@ class TestWireRoundRoute:
                               error_feedback=True)]                 # ADA
         assert not any(compress.packed_wire_eligible(g, tree)
                        for g in goldens)
+
+
+class TestTreeAggregate:
+    """Two-stage tree mean for fleets past the kernel's VMEM worker cap
+    (ops.MEAN_WORKER_CAP): per-chunk masked weighted partial sums, one
+    fleet-wide divide."""
+
+    def _fleet(self, C, seed=0, rows=256):
+        from repro.kernels.quant_pack import quant_pack_ref
+        k = jax.random.fold_in(KEY, seed)
+        xs = jax.random.normal(k, (C, rows, 128))
+        pcs = [quant_pack_ref(xs[c], jnp.int32(c), bits=8) for c in range(C)]
+        packed = jnp.stack([p for p, _ in pcs])
+        scales = jnp.stack([s for _, s in pcs])
+        mask = jax.random.bernoulli(jax.random.fold_in(k, 1), 0.7,
+                                    (C,)).astype(jnp.float32)
+        return packed, scales, mask, (rows, 128)
+
+    def test_chunked_matches_flat_mean(self):
+        """C=96 > cap routes through the tree; the result matches the
+        flat single-stage mean up to f32 re-association."""
+        packed, scales, mask, shape = self._fleet(96)
+        out = wire_aggregate(packed, scales, mask, shape=shape,
+                             interpret=True)
+        C = packed.shape[0]
+        flat = wire_agg_ref(packed, scales, mask.reshape(C, 1),
+                            jnp.ones((C, 1), jnp.float32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(flat),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_chunk_sum_kernel_matches_ref_bitwise(self):
+        """The per-chunk 'sum' partial is bit-identical between the
+        pallas kernel (interpret) and the jnp ref — the invariant that
+        keeps kernel-vs-ref bitwise at every C under the tree."""
+        packed, scales, mask, _ = self._fleet(96, seed=1)
+        C = packed.shape[0]
+        m2 = mask.reshape(C, 1)
+        w2 = jnp.ones((C, 1), jnp.float32)
+        from repro.kernels.wire_agg.ops import MEAN_WORKER_CAP as CAP
+        for g0 in range(0, C, CAP):
+            sl = slice(g0, g0 + CAP)
+            a_k = wire_agg_2d(packed[sl], scales[sl], m2[sl], w2[sl],
+                              aggregator="sum", interpret=True)
+            a_r = wire_agg_ref(packed[sl], scales[sl], m2[sl], w2[sl],
+                               aggregator="sum")
+            np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+    def test_small_fleet_single_stage_bitwise(self):
+        """C <= cap keeps the legacy single-stage call bit-identical to
+        the flat ref — existing pins never see the tree."""
+        packed, scales, mask, shape = self._fleet(8, seed=2)
+        out = wire_aggregate(packed, scales, mask, shape=shape,
+                             interpret=True)
+        flat = wire_agg_ref(packed, scales, mask.reshape(8, 1),
+                            jnp.ones((8, 1), jnp.float32))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(flat))
+
+    def test_forced_cap_uneven_chunks_bitwise(self):
+        """worker_cap=3 on C=8 (uneven tail chunk) reproduces the manual
+        two-stage computation bit-for-bit."""
+        packed, scales, mask, shape = self._fleet(8, seed=3)
+        out = wire_aggregate(packed, scales, mask, shape=shape,
+                             interpret=True, worker_cap=3)
+        m2 = mask.reshape(8, 1)
+        w2 = jnp.ones((8, 1), jnp.float32)
+        parts = [wire_agg_ref(packed[g:g + 3], scales[g:g + 3],
+                              m2[g:g + 3], w2[g:g + 3], aggregator="sum")
+                 for g in range(0, 8, 3)]
+        man = sum(parts[1:], parts[0]) / jnp.maximum((m2 * w2).sum(), 1.0)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(man))
+
+    def test_threshold_boundary(self):
+        """C == cap stays single-stage (no chunks reported); C == cap+1
+        trees into two chunks."""
+        from repro.kernels.wire_agg import ops as wire_ops
+        seen = []
+        orig = runtime.note_dispatch
+        try:
+            runtime.note_dispatch = lambda n, i, **kw: seen.append(kw)
+            for C in (4, 5):
+                packed, scales, mask, shape = self._fleet(C, seed=4)
+                wire_aggregate(packed, scales, mask, shape=shape,
+                               interpret=True, worker_cap=4)
+        finally:
+            runtime.note_dispatch = orig
+        assert "chunks" not in seen[0] and seen[0]["workers"] == 4, seen
+        assert seen[1].get("chunks") == 2 and seen[1]["workers"] == 5, seen
+        assert wire_ops.MEAN_WORKER_CAP == 64
