@@ -12,16 +12,24 @@ trade-off curves, plus a Byzantine sweep showing where median /
 trimmed-mean aggregation retains accuracy while the masked mean
 degrades.
 
+`--json` additionally runs the straggler sweep — accuracy vs
+`round_deadline_s` x staleness-gamma, FedAvg vs M-DSL selection, plus a
+quorum-gated cell — and writes BENCH_stragglers.json at the repo root
+(the CI straggler-smoke job asserts its shape): the graceful-degradation
+claim of the deadline engine (comm.straggler), with numbers.
+
 Usage:
   python -m benchmarks.comm_efficiency --aggregator median \\
       --downlink-compressor int8
   python -m benchmarks.comm_efficiency --full --byzantine 3
+  python -m benchmarks.comm_efficiency --quick --json
 """
 from __future__ import annotations
 
 import argparse
+import json
 
-from benchmarks.common import print_table, save_record
+from benchmarks.common import ROOT, print_table, save_record
 from repro.comm import AGGREGATORS, COMPRESSORS
 from repro.experiments import ExperimentSpec, get_scenario, override
 from repro.experiments import run as run_spec
@@ -69,6 +77,13 @@ PHY_SWEEP = [
 
 QUICK = ("run.rounds=8", "model.width_mult=2", "data.num_workers=10",
          "data.n_local=256", "algo.hp.learning_rate=0.05")
+
+# straggler grid (comm.straggler): deadlines bracket the quick model's
+# ~24 ms airtime at the Rayleigh 10 dB budget (loose / binding / tight),
+# gammas span drain-at-full-weight vs 1/(1+age) FedBuff discounting
+STRAGGLER_DEADLINES = (0.05, 0.025, 0.015)
+STRAGGLER_GAMMAS = (0.0, 1.0)
+STRAGGLER_JSON = ROOT / "BENCH_stragglers.json"
 
 
 def rounds_to(acc_curve: list[float], target: float) -> int | None:
@@ -195,12 +210,62 @@ def phy_sweep(spec: ExperimentSpec) -> dict:
     return out
 
 
+def straggler_sweep(spec: ExperimentSpec,
+                    algorithms: tuple[str, ...] = ("fedavg", "mdsl")
+                    ) -> dict:
+    """Accuracy vs round deadline x staleness-gamma on a heterogeneous
+    Rayleigh uplink (pathloss spread + fading make the slow tail late),
+    FedAvg vs M-DSL selection, plus one quorum-gated cell. A tighter
+    deadline parks more uploads; gamma prices how much a drained stale
+    delta still counts — the table shows where buffering holds accuracy
+    against simply losing the late uploads."""
+    base = override(spec, *_RAYLEIGH, "comm.pathloss_spread_db=6.0")
+    out = {"deadlines_s": list(STRAGGLER_DEADLINES),
+           "gammas": list(STRAGGLER_GAMMAS), "runs": {}}
+    rows = []
+
+    def cell(algo: str, name: str, *ovr: str) -> None:
+        r = _run_one(base, f"algo.algorithm={algo}", *ovr,
+                     cell=f"straggler/{name}")
+        late = sum(r.get("late", []))
+        drained = sum(r.get("drained", []))
+        holds = sum(r.get("held", []))
+        out["runs"][name] = {
+            "final_acc": r["final_acc"], "best_acc": r["best_acc"],
+            "acc": r["acc"], "total_bytes": r["total_bytes"],
+            "total_airtime_s": r["total_airtime_s"],
+            "late": r.get("late"), "drained": r.get("drained"),
+            "buffered": r.get("buffered"), "held": r.get("held")}
+        rows.append([name, f"{r['final_acc']:.3f}", f"{r['best_acc']:.3f}",
+                     int(late), int(drained), int(holds),
+                     f"{r['total_bytes'] / 2**20:.2f}MiB"])
+
+    for algo in algorithms:
+        cell(algo, f"{algo}/no-deadline")
+        for d in STRAGGLER_DEADLINES:
+            for g in STRAGGLER_GAMMAS:
+                cell(algo, f"{algo}/ddl{d:g}/g{g:g}",
+                     f"comm.round_deadline_s={d}",
+                     f"comm.staleness_gamma={g}")
+    # graceful degradation: the PS holds w_t when a thin round cannot
+    # reach quorum instead of averaging whatever trickled in
+    tight = STRAGGLER_DEADLINES[-1]
+    cell("mdsl", f"mdsl/ddl{tight:g}/g1/quorum4",
+         f"comm.round_deadline_s={tight}", "comm.staleness_gamma=1.0",
+         "comm.quorum=4")
+    print_table(["cell", "final_acc", "best_acc", "late", "drained",
+                 "holds", "total bytes"], rows,
+                "straggler sweep — accuracy vs deadline x staleness-γ "
+                "(Rayleigh 10 dB, 6 dB pathloss spread)")
+    return out
+
+
 def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
         algorithms: tuple[str, ...] = ("fedavg", "mdsl"),
         aggregator: str = "mean", downlink_compressor: str = "identity",
         adaptive_bits: bool = False, byzantine: int = 2,
         rounds_override: int | None = None, phy: bool = True,
-        obs: bool = False) -> dict:
+        obs: bool = False, stragglers: bool = False) -> dict:
     if obs:
         _obs_enable(f"{dataset}__s{seed}")
     base = base_spec(quick=quick, dataset=dataset, seed=seed,
@@ -295,6 +360,12 @@ def run(quick: bool = True, dataset: str = "mnist_like", seed: int = 0,
         rec["phy_sweep"] = phy_sweep(base)
     if byzantine > 0:
         rec["byzantine_sweep"] = byzantine_sweep(base, byzantine)
+    if stragglers:
+        srec = straggler_sweep(base, algorithms=algorithms)
+        srec.update({"n_params": n, "C": C, "rounds": rounds})
+        rec["straggler_sweep"] = srec
+        STRAGGLER_JSON.write_text(json.dumps(srec, indent=1))
+        print(f"straggler record -> {STRAGGLER_JSON}")
     save_record("comm_efficiency", rec)
     if _EM.active:
         _EM.run_end(rounds=0, totals={"cells": float(len(recs))})
@@ -327,6 +398,9 @@ def main() -> None:
     ap.add_argument("--obs", action="store_true",
                     help="stream per-cell SweepEvents (and per-round "
                          "run streams) under artifacts/obs/")
+    ap.add_argument("--json", action="store_true",
+                    help="run the straggler sweep (deadline x gamma) "
+                         "and write BENCH_stragglers.json at the root")
     args = ap.parse_args()
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
@@ -334,7 +408,8 @@ def main() -> None:
         aggregator=args.aggregator,
         downlink_compressor=args.downlink_compressor,
         adaptive_bits=args.adaptive_bits, byzantine=args.byzantine,
-        rounds_override=args.rounds, phy=not args.no_phy, obs=args.obs)
+        rounds_override=args.rounds, phy=not args.no_phy, obs=args.obs,
+        stragglers=args.json)
 
 
 if __name__ == "__main__":

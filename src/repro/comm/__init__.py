@@ -16,6 +16,10 @@ comm/accuracy trade-off is an experiment axis:
                robust Eq.-7 variants) + Byzantine worker attacks
   budget.py    CommConfig + per-round CommRecord: bytes on the wire,
                and SNR->rate airtime / transmit energy (rate_bps)
+  straggler.py deadline-driven straggler engine: airtime-derived late
+               masks, the StragglerBuffer of parked deltas, FedBuff-
+               style staleness-discounted drains, quorum-gated rounds,
+               and deterministic fault (churn) injection
 
 Both engines (`core/mdsl.py`, `core/swarm_dist.py`) carry the PhyState
 in their train states and thread a `CommConfig` through their round
@@ -37,13 +41,19 @@ from repro.comm.channel import (corrupt_local_updates, erasure_mask,
 from repro.comm.compress import (compress_with_ef, init_residual,
                                  select_residual)
 from repro.comm.phy import LinkModel, PhyState, delivery_mask, link_model
+from repro.comm.straggler import (StragglerBuffer, StragglerStats,
+                                  aggregate_and_drain, alive_mask,
+                                  init_buffer, late_mask,
+                                  staleness_weights)
 
 __all__ = ["AGGREGATORS", "BYZANTINE_MODES", "CHANNELS", "COMPRESSORS",
            "CommConfig", "CommRecord", "FADING_MODELS", "LinkModel",
-           "PhyState", "RATE_MODELS", "TIER_RANKS", "compress_with_ef",
-           "corrupt_local_updates", "degrade", "delivery_mask",
-           "dense_bytes", "downlink_config", "erasure_mask",
-           "host_round_bytes", "init_residual", "leaf_payload_bytes",
+           "PhyState", "RATE_MODELS", "StragglerBuffer", "StragglerStats",
+           "TIER_RANKS", "aggregate_and_drain", "alive_mask",
+           "compress_with_ef", "corrupt_local_updates", "degrade",
+           "delivery_mask", "dense_bytes", "downlink_config",
+           "erasure_mask", "host_round_bytes", "init_buffer",
+           "init_residual", "late_mask", "leaf_payload_bytes",
            "link_model", "payload_bytes", "rate_bps", "receive",
-           "round_record", "select_residual", "topk_count",
-           "uplink_tiers"]
+           "round_record", "select_residual", "staleness_weights",
+           "topk_count", "uplink_tiers"]

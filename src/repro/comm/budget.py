@@ -71,12 +71,27 @@ class CommConfig(NamedTuple):
     pathloss_spread_db: float = 0.0     # static per-worker pathloss spread
     outage_snr_db: Optional[float] = None  # delivery: SNR outage cut (None off)
     rate_model: str = "shannon"         # see RATE_MODELS (SNR -> rate)
-    bandwidth_hz: float = 1e6           # uplink bandwidth per worker
+    bandwidth_hz: Optional[float] = 1e6  # uplink bandwidth per worker
+    #                                      (None = no rate model: airtime/
+    #                                      energy unpriced, deadlines off)
     tx_power_w: float = 0.1             # transmit power (energy accounting)
     coding_gap_db: float = 3.0          # practical-coding gap to capacity
     # -- adaptive tiers (widened: N tiers, score- or SNR-ranked) --------
     num_tiers: int = 2                  # adaptive_bits: wire tier count
     tier_rank: str = "score"            # see TIER_RANKS (Eq.-5 | inst. SNR)
+    # -- straggler / deadline engine (comm.straggler) -------------------
+    round_deadline_s: Optional[float] = None  # uplink airtime budget per
+    #                                    round; an upload whose airtime
+    #                                    exceeds it is late -> buffered
+    #                                    (None = every upload on time)
+    staleness_gamma: float = 1.0        # drain discount 1/(1+age)^gamma
+    quorum: int = 0                     # min deltas (fresh + drained) to
+    #                                    apply an aggregate (0 = no gate)
+    # -- fault injection (deterministic worker churn) -------------------
+    fault_prob: float = 0.0             # P(worker starts an outage /round)
+    fault_rounds: int = 1               # outage length in rounds
+    fault_seed: int = 0                 # schedule stream (static, keyed
+    #                                    off the round index like POP_SALT)
 
     def validate(self) -> "CommConfig":
         if self.compressor not in COMPRESSORS:
@@ -112,8 +127,9 @@ class CommConfig(NamedTuple):
         if self.pathloss_spread_db < 0.0:
             raise ValueError(f"pathloss_spread_db must be >= 0, got "
                              f"{self.pathloss_spread_db}")
-        if self.bandwidth_hz <= 0.0:
-            raise ValueError(f"bandwidth_hz must be > 0, got "
+        if self.bandwidth_hz is not None and self.bandwidth_hz <= 0.0:
+            raise ValueError(f"bandwidth_hz must be > 0 (or None to "
+                             f"disable the rate model), got "
                              f"{self.bandwidth_hz}")
         if self.tx_power_w <= 0.0:
             raise ValueError(f"tx_power_w must be > 0, got "
@@ -136,6 +152,32 @@ class CommConfig(NamedTuple):
                 "(fading='rayleigh' or pathloss_spread_db > 0) — with "
                 "one static fleet-wide SNR the outage is a degenerate "
                 "all-or-nothing blackout")
+        if self.round_deadline_s is not None and self.round_deadline_s <= 0.0:
+            raise ValueError(f"round_deadline_s must be > 0 (or None to "
+                             f"disable deadlines), got "
+                             f"{self.round_deadline_s}")
+        if self.round_deadline_s is not None and self.bandwidth_hz is None:
+            # mirrors the outage-needs-per-worker-SNR cross-check: a
+            # deadline is only meaningful against an airtime, and airtime
+            # needs the SNR -> rate model
+            raise ValueError(
+                "round_deadline_s needs a rate model to derive airtimes "
+                "(payload_bytes / rate_bps) — set bandwidth_hz")
+        if self.staleness_gamma < 0.0:
+            raise ValueError(f"staleness_gamma must be >= 0, got "
+                             f"{self.staleness_gamma}")
+        if self.quorum < 0:
+            raise ValueError(f"quorum must be >= 0, got {self.quorum}")
+        if self.quorum > 0 and self.round_deadline_s is None:
+            raise ValueError(
+                "quorum gating rides the straggler engine — set "
+                "round_deadline_s to enable it")
+        if not 0.0 <= self.fault_prob < 1.0:
+            raise ValueError(f"fault_prob must be in [0, 1), got "
+                             f"{self.fault_prob}")
+        if self.fault_rounds < 1:
+            raise ValueError(f"fault_rounds must be >= 1, got "
+                             f"{self.fault_rounds}")
         return self
 
 
@@ -239,8 +281,33 @@ def rate_bps(cfg: CommConfig, snr_db: Array) -> Array:
         R = B log2(1 + 10^((snr_db - gap_db) / 10)).
 
     This is what converts payload bytes into airtime and energy."""
+    if cfg.bandwidth_hz is None:
+        raise ValueError("rate_bps: no rate model (bandwidth_hz is None)")
     eff_snr = 10.0 ** ((snr_db - cfg.coding_gap_db) / 10.0)
     return cfg.bandwidth_hz * jnp.log2(1.0 + eff_snr)
+
+
+def worker_payload_bytes(cfg: CommConfig, params: PyTree,
+                         num_workers: int,
+                         tier_idx: Array = None) -> Array:
+    """(C,) f32 uplink payload bytes per worker, resolving per-worker
+    wire tiers (`tier_idx` indexes `uplink_tiers(cfg)`; None = the fleet
+    shares one wire config). Payload sizes are static Python ints, so
+    this is jit-safe."""
+    tiers = uplink_tiers(cfg)
+    payloads = [payload_bytes(t, params) for t in tiers]
+    if tier_idx is None or len(tiers) == 1:
+        return jnp.full((num_workers,), payloads[0], jnp.float32)
+    return sum((tier_idx == t).astype(jnp.float32) * p
+               for t, p in enumerate(payloads))
+
+
+def worker_airtime_s(cfg: CommConfig, worker_bytes: Array,
+                     snr_db: Array) -> Array:
+    """(C,) per-upload airtime: bits on the wire over the achievable
+    rate at each worker's received SNR. The straggler engine compares
+    this against `round_deadline_s` to derive deadline misses."""
+    return 8.0 * worker_bytes / rate_bps(cfg, snr_db)
 
 
 def host_round_bytes(cfg: CommConfig, *, selected, bytes_up_jit,
@@ -271,10 +338,11 @@ def round_record(cfg: CommConfig, params: PyTree, num_workers: int,
     tiers = uplink_tiers(cfg)
     dense = dense_bytes(params)
     payloads = [payload_bytes(t, params) for t in tiers]
+    worker_bytes = worker_payload_bytes(cfg, params, num_workers,
+                                        tier_idx=tier_idx)
     if tier_idx is None or len(tiers) == 1:
         bytes_up = mask.sum() * payloads[0]
         mean_payload = payloads[0]
-        worker_bytes = jnp.full(mask.shape, payloads[0], jnp.float32)
     else:
         on_tier = [(tier_idx == t).astype(jnp.float32)
                    for t in range(len(tiers))]
@@ -283,15 +351,16 @@ def round_record(cfg: CommConfig, params: PyTree, num_workers: int,
         mean_payload = sum(p * on_t.sum()
                            for on_t, p in zip(on_tier, payloads)
                            ) / num_workers
-        worker_bytes = sum(on_t * p for on_t, p in zip(on_tier, payloads))
     bytes_down = num_workers * payload_bytes(downlink_config(cfg), params)
     # SNR -> rate -> airtime/energy: every transmitting (selected) worker
     # occupies the channel for bits/rate seconds, lost packets included —
     # a drop wastes the airtime it consumed (same convention as bytes_up)
     snr = (snr_db if snr_db is not None
            else jnp.full(mask.shape, cfg.snr_db, jnp.float32))
-    per_worker_airtime = 8.0 * worker_bytes / rate_bps(cfg, snr)
-    airtime = (mask * per_worker_airtime).sum()
+    if cfg.bandwidth_hz is None:
+        airtime = jnp.zeros((), jnp.float32)  # no rate model: unpriced
+    else:
+        airtime = (mask * worker_airtime_s(cfg, worker_bytes, snr)).sum()
     return CommRecord(
         bytes_up=bytes_up,
         bytes_down=jnp.asarray(bytes_down, jnp.float32),

@@ -108,9 +108,16 @@ def packed_wire_eligible(cfg: CommConfig, tree: PyTree) -> bool:
     the packed route handles via the mask), and f32 leaves (the fused
     kernels produce f32 residuals/aggregates; mixed-precision models
     keep the dense route's per-leaf astype semantics). Static under jit:
-    depends only on the config and leaf dtypes."""
+    depends only on the config and leaf dtypes.
+
+    The straggler engine (round_deadline_s) also forces the dense route:
+    late uploads must be parked as dense decoded deltas in the per-worker
+    buffer, so the PS needs the individual reconstructions the fused
+    aggregate never materializes (docs/async.md)."""
     from repro.comm.phy import link_model
     if quant_bits(cfg) is None or cfg.adaptive_bits:
+        return False
+    if cfg.round_deadline_s is not None:
         return False
     if link_model(cfg).awgn:
         return False

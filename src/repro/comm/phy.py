@@ -145,12 +145,24 @@ def lazy_fading_coeffs(cfg: CommConfig, steps: Array
     return rho_d, jnp.sqrt(jnp.maximum(1.0 - rho_d * rho_d, 0.0))
 
 
-def advance_age(phy: PhyState, mask_eff: Array) -> PhyState:
+def advance_age(phy: PhyState, mask_eff: Array,
+                buffered: Optional[Array] = None) -> PhyState:
     """Refresh the staleness counter after the Aggregate stage: a
     delivered upload resets the worker's age, everyone else ages one
-    round (the async/stale-round stage weights by this)."""
+    round (the async/stale-round stage weights by this).
+
+    `buffered` (straggler engine, comm.straggler) marks workers whose
+    upload arrived late and is *parked* at the PS rather than dropped:
+    the PS has heard from them this round, so their age pins at 1
+    (mildly stale) instead of growing like a silent worker's. With
+    buffered=None (deadline off) the legacy delivered/undelivered
+    behavior is bit-identical."""
     delivered = mask_eff > 0
-    return phy._replace(age=jnp.where(delivered, 0, phy.age + 1))
+    aged = jnp.where(delivered, 0, phy.age + 1)
+    if buffered is not None:
+        aged = jnp.where((buffered > 0) & ~delivered,
+                         jnp.ones_like(aged), aged)
+    return phy._replace(age=aged)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,266 @@
+"""repro.comm.straggler — the deadline-driven straggler engine.
+
+Vanilla DSL assumes every selected upload lands inside the round. This
+module makes deadline misses a first-class wire effect, derived from
+the physical layer instead of coin-flips:
+
+  late        a selected upload whose airtime (payload bits over the
+              SNR->rate model, `budget.worker_airtime_s`) exceeds
+              `round_deadline_s` misses the round. It still consumed
+              its airtime/energy and advanced the worker's EF residual
+              — the transmission happened — but the PS cannot fold it
+              into this round's Eq.-7 aggregate.
+  buffer      late arrivals are *parked*, not dropped: one dense
+              decoded delta + an int32 staleness counter per worker
+              (`StragglerBuffer`), carried in both engine states and
+              sharded on the mesh path like the EF residual. One slot
+              per worker; a newer late delta overwrites an older one.
+  drain       on a later round the buffered deltas re-enter the
+              aggregate FedBuff-style, discounted by staleness:
+              w = 1/(1+age)^gamma. gamma=0 makes a drained delta
+              indistinguishable from an on-time one (the telescoping
+              property pinned in tests/test_straggler.py); large gamma
+              quenches stale directions. The discount composes with
+              mean/median/trimmed aggregation (drained rows enter the
+              order statistics pre-scaled by their weight).
+  quorum      graceful degradation: with fewer than `quorum` deltas
+              available (fresh + drained), the PS holds w_t bitwise
+              unchanged instead of averaging noise — the downlink
+              broadcasts the old model, the PS EF residual is frozen,
+              and the buffered deltas wait another round (ageing as
+              they do). The event lands in RoundTelemetry.held.
+  faults      deterministic worker churn for robustness tests: each
+              round every worker starts an R-round outage with
+              `fault_prob`, keyed off the round index on a dedicated
+              salt (same discipline as population.POP_SALT) — the
+              schedule is a pure function of (fault_seed, round), so
+              runs replay exactly. A crashed worker transmits nothing:
+              no bytes, no airtime, no EF advance.
+
+Aggregation noise discipline: asynchronous arrivals cannot superpose
+over the air, so AWGN in straggler mode is always per-upload digital
+decode noise (at each worker's own instantaneous SNR when the phy
+differentiates them, at the shared budget otherwise); the buffer
+stores the noisy decode — the distortion happened at arrival time.
+
+With `round_deadline_s=None` every upload is on time, no buffer state
+exists (engine states carry None), and the wire is bit-identical to
+the legacy route (golden-pinned in tests/test_rounds.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import budget as comm_budget
+from repro.comm import channel as comm_channel
+from repro.comm import phy as comm_phy
+from repro.comm.budget import CommConfig
+
+Array = jax.Array
+PyTree = Any
+
+FAULT_SALT = 0xFA  # fault schedule stream = fold_in(PRNGKey(fault_seed),
+#                    FAULT_SALT): independent of every training/channel
+#                    key, deterministic given (fault_seed, round index)
+
+
+class StragglerBuffer(NamedTuple):
+    """Per-worker parked-delta state (leading worker dim C), carried in
+    the engine train states next to the EF residual and sharded the
+    same way on the mesh path."""
+    delta: PyTree   # (C, ...) f32 dense decoded deltas (zero when empty)
+    age: Array      # (C,) int32 rounds since parked; 0 = empty slot
+
+
+class StragglerStats(NamedTuple):
+    """One round of straggler telemetry (f32 scalars, jit-friendly)."""
+    late: Array      # selected uploads past the deadline this round
+    drained: Array   # buffered deltas folded into this round's aggregate
+    buffered: Array  # buffer occupancy after the round
+    held: Array      # 1.0 when the quorum gate held the global model
+
+
+def active(cfg: CommConfig) -> bool:
+    """Static: is the straggler engine on? (Python bool under jit.)"""
+    return cfg.round_deadline_s is not None
+
+
+def fault_mode(cfg: CommConfig) -> bool:
+    """Static: is deterministic worker churn on?"""
+    return cfg.fault_prob > 0.0
+
+
+def init_buffer(cfg: CommConfig,
+                stacked_params: PyTree) -> Optional[StragglerBuffer]:
+    """Zero buffered-delta state shaped like the stacked worker models,
+    or None when the straggler engine is off — the engine states then
+    carry a None pytree node, so legacy configs pay nothing and stay
+    structurally identical to before this layer existed."""
+    if not active(cfg):
+        return None
+    leaves = jax.tree.leaves(stacked_params)
+    C = leaves[0].shape[0]
+    delta = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                         stacked_params)
+    return StragglerBuffer(delta=delta, age=jnp.zeros((C,), jnp.int32))
+
+
+def alive_mask(cfg: CommConfig, round_idx: Array,
+               num_workers: int) -> Array:
+    """(C,) float mask of workers NOT in an outage at `round_idx`.
+
+    A worker is down iff it drew a crash on any of the last
+    `fault_rounds` rounds: outages last exactly R rounds and revive on
+    their own. The draw for round t lives on fold_in(stream, t), so the
+    schedule is a pure function of the static config and the round
+    index — no training key is consumed, and any round's fleet status
+    can be recomputed in isolation (same replayability discipline as
+    the population engine's POP_SALT cohorts)."""
+    stream = jax.random.fold_in(jax.random.PRNGKey(cfg.fault_seed),
+                                FAULT_SALT)
+    t0 = jnp.asarray(round_idx, jnp.int32)
+    down = jnp.zeros((num_workers,), bool)
+    for r in range(cfg.fault_rounds):
+        t = t0 - r
+        crash = jax.random.bernoulli(jax.random.fold_in(stream, t),
+                                     cfg.fault_prob, (num_workers,))
+        down = down | (crash & (t >= 0))
+    return (~down).astype(jnp.float32)
+
+
+def late_mask(cfg: CommConfig, params: PyTree, mask: Array,
+              snr_db: Optional[Array] = None,
+              tier_idx: Optional[Array] = None) -> Array:
+    """(C,) indicator of selected uploads that miss the round deadline:
+    per-worker airtime (payload bytes through the SNR->rate model)
+    strictly above `round_deadline_s`. Purely physical — a deep fade or
+    a heavy tier makes a worker late, not a coin flip."""
+    C = mask.shape[0]
+    wb = comm_budget.worker_payload_bytes(cfg, params, C, tier_idx=tier_idx)
+    snr = (snr_db if snr_db is not None
+           else jnp.full((C,), cfg.snr_db, jnp.float32))
+    air = comm_budget.worker_airtime_s(cfg, wb, snr)
+    return mask * (air > cfg.round_deadline_s).astype(mask.dtype)
+
+
+def staleness_weights(cfg: CommConfig, age: Array) -> Array:
+    """(C,) FedBuff-style drain discount: 1/(1+age)^gamma for occupied
+    slots, 0 for empty ones. gamma=0 -> every buffered delta drains at
+    full weight (the telescoping case); larger gamma suppresses stale
+    directions harder."""
+    occupied = (age > 0).astype(jnp.float32)
+    af = age.astype(jnp.float32)
+    return occupied * (1.0 + af) ** (-cfg.staleness_gamma)
+
+
+def aggregate_and_drain(cfg: CommConfig, global_params: PyTree,
+                        wire_deltas: PyTree, mask: Array, late: Array,
+                        key: Array, snr_db: Optional[Array],
+                        buffer: StragglerBuffer
+                        ) -> tuple[PyTree, Array, StragglerBuffer,
+                                   StragglerStats]:
+    """The straggler Aggregate stage: deliver, split fresh/late, drain
+    the buffer with staleness discounts, gate on the quorum, and update
+    the parked-delta state.
+
+    Consumes the same ekey/nkey split as `channel.receive`, so the
+    delivery draw is bit-comparable with the legacy route. Returns
+    (w_{t+1}, fresh_mask, new_buffer, stats) where fresh_mask marks the
+    on-time deliveries — the uploads inside THIS round's aggregate
+    (late-but-parked arrivals are accounted separately, via
+    stats/advance_age's `buffered` channel)."""
+    link = comm_phy.link_model(cfg)
+    ekey, nkey = jax.random.split(key)
+    delivered = comm_phy.delivery_mask(cfg, mask, ekey, snr_db=snr_db)
+    fresh = delivered * (1.0 - late)
+    late_arrivals = delivered * late
+
+    g_leaves, treedef = jax.tree.flatten(global_params)
+    d_leaves = jax.tree.leaves(wire_deltas)
+    b_leaves = jax.tree.leaves(buffer.delta)
+
+    # distortion at arrival time: per-upload digital decode noise (an
+    # async round has no analog superposition to ride), same per-leaf
+    # fold_in(nkey, i) streams as channel.receive
+    noisy = []
+    for i, d in enumerate(d_leaves):
+        d = d.astype(jnp.float32)
+        if link.awgn:
+            snr_for_noise = (snr_db if link.per_worker and snr_db is not None
+                             else jnp.full((d.shape[0],), cfg.snr_db,
+                                           jnp.float32))
+            sigma = comm_phy.noise_sigma_per_worker(d, snr_for_noise)
+            d = d + sigma * jax.random.normal(jax.random.fold_in(nkey, i),
+                                              d.shape, jnp.float32)
+        noisy.append(d)
+
+    w_drain = staleness_weights(cfg, buffer.age)
+    n_drain = (buffer.age > 0).astype(jnp.float32).sum()
+    available = fresh.sum() + n_drain
+    held = ((available < cfg.quorum) if cfg.quorum > 0
+            else jnp.zeros((), bool))
+
+    # 2C-row aggregate: fresh uploads at weight 1, drained buffer
+    # entries at their staleness discount
+    weights = jnp.concatenate([fresh.astype(jnp.float32), w_drain])
+    participants = (weights > 0).astype(jnp.float32)
+
+    if cfg.aggregator == "mean":
+        # FedBuff convention: discounted numerator over the participant
+        # count — a lone very-stale delta moves the model by w*d, and
+        # with no drained entries this is exactly the legacy masked mean
+        denom = jnp.maximum(participants.sum(), 1.0)
+        out = []
+        for g, d, b in zip(g_leaves, noisy, b_leaves):
+            rows = jnp.concatenate([d, b.astype(jnp.float32)], axis=0)
+            w = weights.reshape((-1,) + (1,) * (rows.ndim - 1))
+            out.append((g + (w * rows).sum(axis=0) / denom).astype(g.dtype))
+        agg = jax.tree.unflatten(treedef, out)
+    else:
+        # median / trimmed mean: drained rows enter the order statistics
+        # pre-scaled by their discount; noise is already applied, so the
+        # robust path runs with distortion off
+        rows_leaves = []
+        for d, b in zip(noisy, b_leaves):
+            rows = jnp.concatenate([d, b.astype(jnp.float32)], axis=0)
+            w = weights.reshape((-1,) + (1,) * (rows.ndim - 1))
+            rows_leaves.append(w * rows)
+        rows_tree = jax.tree.unflatten(treedef, rows_leaves)
+        quiet = link._replace(awgn=False)
+        agg = comm_channel._robust_receive(cfg, quiet, global_params,
+                                           rows_tree, participants, nkey,
+                                           snr_db=None)
+
+    # quorum hold: w_t survives bitwise (pinned in tests)
+    out_params = jax.tree.map(lambda g, a: jnp.where(held, g, a),
+                              global_params, agg)
+
+    # buffer lifecycle: late arrivals park (newest delta wins the slot,
+    # age 1); on a held round fresh arrivals park too and surviving
+    # entries age one more round; on an applied round every occupied
+    # slot drained above, so it clears
+    occupied = buffer.age > 0
+    parked = (late_arrivals > 0) | (held & (fresh > 0))
+    kept = occupied & held & ~parked
+    new_age = jnp.where(parked, 1,
+                        jnp.where(kept, buffer.age + 1, 0)
+                        ).astype(jnp.int32)
+
+    def buf_leaf(d, b):
+        p = parked.reshape((-1,) + (1,) * (d.ndim - 1))
+        k = kept.reshape((-1,) + (1,) * (d.ndim - 1))
+        return jnp.where(p, d, jnp.where(k, b, 0.0)).astype(jnp.float32)
+
+    new_delta = jax.tree.unflatten(
+        treedef, [buf_leaf(d, b) for d, b in zip(noisy, b_leaves)])
+    new_buffer = StragglerBuffer(delta=new_delta, age=new_age)
+
+    stats = StragglerStats(
+        late=(mask * late).sum().astype(jnp.float32),
+        drained=jnp.where(held, 0.0, n_drain).astype(jnp.float32),
+        buffered=(new_age > 0).sum().astype(jnp.float32),
+        held=held.astype(jnp.float32))
+    return out_params, fresh, new_buffer, stats

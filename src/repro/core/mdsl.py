@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.comm import channel as comm_channel
 from repro.comm import compress as comm_compress
 from repro.comm import phy as comm_phy
+from repro.comm import straggler as comm_straggler
 from repro.comm.budget import CommConfig
 from repro.core import pso, rounds, selection
 from repro.core.pso import (GlobalBest, PsoCoefficients, PsoHyperParams,
@@ -79,6 +80,9 @@ class SwarmTrainState(NamedTuple):
     residual: PyTree                 # (C, ...) uplink error-feedback state
     ps_residual: PyTree              # PS-side downlink error-feedback state
     phy: comm_phy.PhyState           # per-worker channel state (comm.phy)
+    # (C, ...) parked late deltas + staleness ages (comm.straggler);
+    # None unless comm.round_deadline_s is set
+    buffer: Any = None
 
 
 def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
@@ -101,6 +105,7 @@ def init_state(key: Array, init_params_fn: Callable[[Array], PyTree],
         residual=comm_compress.init_residual(stacked),
         ps_residual=rounds.init_ps_residual(params),
         phy=comm_phy.init_state(comm, num_workers),
+        buffer=comm_straggler.init_buffer(comm, stacked),
     )
 
 
@@ -229,7 +234,8 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
     out = pipe.wire(delta=delta, theta=theta, mask=mask,
                     global_params=state.global_params,
                     residual=state.residual, ps_residual=state.ps_residual,
-                    qkey=qkey, wkey=wkey, phy=state.phy)
+                    qkey=qkey, wkey=wkey, phy=state.phy,
+                    buffer=state.buffer, round_idx=state.round_idx)
 
     # --- BestTracking (Eq. 10) + next state. ---
     with rounds.stage_span("BestTracking"):
@@ -240,7 +246,8 @@ def mdsl_round(state: SwarmTrainState, data_x: Array, data_y: Array,
         workers=workers, global_params=out.global_params, gbest=gbest,
         sel=SelectionState(prev_theta_mean=theta_mean),
         round_idx=state.round_idx + 1, eta=state.eta,
-        residual=out.residual, ps_residual=out.ps_residual, phy=out.phy)
+        residual=out.residual, ps_residual=out.ps_residual, phy=out.phy,
+        buffer=out.buffer)
     return next_state, pipe.telemetry(losses=eval_losses, theta=theta,
                                       mask=mask, global_loss=global_loss,
                                       outcome=out)

@@ -48,6 +48,7 @@ from repro.comm import budget as comm_budget
 from repro.comm import channel as comm_channel
 from repro.comm import compress as comm_compress
 from repro.comm import phy as comm_phy
+from repro.comm import straggler as comm_straggler
 from repro.comm.budget import CommConfig
 from repro.comm.phy import PhyState
 from repro.core import selection
@@ -82,6 +83,15 @@ class RoundTelemetry(NamedTuple):
     # (core/population.py); None on legacy full-fleet runs, so existing
     # engines/goldens never see the field
     cohort: Any = None
+    # straggler engine scalars (comm.straggler); None unless
+    # round_deadline_s is set, so legacy configs never see them
+    late: Any = None          # () selected uploads past the deadline
+    drained: Any = None       # () buffered deltas folded in this round
+    buffered: Any = None      # () buffer occupancy after the round
+    held: Any = None          # () 1.0 on a quorum-hold round
+    # () workers that actually transmitted (selected minus crashed);
+    # None unless fault injection is on
+    transmitted: Any = None
 
     # pre-refactor field names, kept so existing consumers read the
     # unified record unchanged
@@ -102,6 +112,9 @@ class WireOutcome(NamedTuple):
     mask_eff: Array           # (C,) post-channel survivor mask
     record: comm_budget.CommRecord
     phy: Any = None           # advanced PhyState (None for phy-less calls)
+    buffer: Any = None        # advanced StragglerBuffer (None: deadline off)
+    straggler: Any = None     # StragglerStats (None: deadline off)
+    transmitted: Any = None   # () transmitting-worker count (None: no faults)
 
 
 # ---------------------------------------------------------------------------
@@ -247,13 +260,14 @@ def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
                mask: Array, global_params: PyTree, residual: PyTree,
                ps_residual: PyTree, qkey: Array, wkey: Array,
                num_workers: int, phy: PhyState = None,
+               buffer: Any = None, round_idx: Array = None,
                axis_name: Any = None,
                uplink_fn: Callable = uplink,
                aggregate_fn: Callable = comm_channel.receive,
                downlink_fn: Callable = downlink) -> WireOutcome:
     """Uplink -> Aggregate -> Downlink with byte/airtime accounting: the
     single home of the wire pipeline shared by every engine. Stage
-    functions are injectable (async staleness, ... plug in here).
+    functions are injectable (custom aggregation rules plug in here).
 
     `phy` is the per-worker channel state (comm.phy.PhyState): the
     fading gains evolve first (block fading — one draw per round, on
@@ -262,7 +276,39 @@ def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
     SNRs (tier ranking, outage, distortion, airtime/energy), and the
     advanced state (with refreshed delivery ages) returns in the
     outcome. With phy=None the wire prices airtime at the shared
-    cfg.snr_db and no per-worker SNR effects apply."""
+    cfg.snr_db and no per-worker SNR effects apply.
+
+    `buffer`/`round_idx` feed the straggler engine (comm.straggler):
+    with `round_deadline_s` set, a Straggle stage between Uplink and
+    Aggregate derives deadline misses from each upload's airtime, parks
+    late deltas in `buffer`, drains stale ones with the FedBuff
+    discount, and holds w_t bitwise when fewer than `quorum` deltas are
+    available. With `fault_prob` > 0 a deterministic churn schedule
+    (keyed off `round_idx`) deselects crashed workers before the
+    uplink. Both default to off, leaving the legacy route untouched."""
+    straggler_mode = comm_straggler.active(comm)
+    if straggler_mode and (uplink_fn is not uplink
+                           or aggregate_fn is not comm_channel.receive):
+        raise ValueError(
+            "round_deadline_s replaces the Aggregate stage with the "
+            "straggler engine; it cannot compose with injected "
+            "uplink/aggregate stage functions")
+    if straggler_mode and buffer is None:
+        raise ValueError(
+            "straggler mode needs the parked-delta state: init the "
+            "engine with comm.straggler.init_buffer and thread it "
+            "through wire_round(buffer=...)")
+    transmitted = None
+    if comm_straggler.fault_mode(comm):
+        if round_idx is None:
+            raise ValueError("fault injection (fault_prob > 0) needs the "
+                             "round index: pass wire_round(round_idx=...)")
+        # crashed workers transmit nothing: no bytes, no airtime, no EF
+        # advance — the Eq.-6 selection stays what the scores chose, the
+        # wire just never hears from them
+        alive = comm_straggler.alive_mask(comm, round_idx, mask.shape[0])
+        mask = mask * alive
+        transmitted = mask.sum()
     if phy is not None:
         phy = comm_phy.evolve(comm, phy,
                               jax.random.fold_in(wkey, comm_phy.PHY_SALT))
@@ -283,6 +329,7 @@ def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
                     and comm_compress.packed_wire_eligible(comm, delta))
     # stage_span is a shared nullcontext unless an obs tracer is
     # installed; spans inside a jitted round fire at trace time
+    sstats = None
     if packed_route:
         with stage_span("Uplink"):
             wire, residual = uplink_packed(comm, delta, residual, mask,
@@ -291,6 +338,24 @@ def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
         with stage_span("Aggregate"):
             agg_params, mask_eff = comm_channel.receive_packed(
                 comm, global_params, wire, mask, wkey, snr_db=snr_db)
+    elif straggler_mode:
+        # the straggler route always runs the dense uplink: parking a
+        # late delta needs the individual reconstruction
+        # (compress.packed_wire_eligible gates the fused route off)
+        with stage_span("Uplink"):
+            wire, residual, tier_idx = uplink_fn(comm, delta, residual,
+                                                 theta, mask, qkey,
+                                                 snr_db=snr_db,
+                                                 axis_name=axis_name)
+        with stage_span("Straggle"):
+            late = comm_straggler.late_mask(comm, global_params, mask,
+                                            snr_db=snr_db,
+                                            tier_idx=tier_idx)
+        with stage_span("Aggregate"):
+            agg_params, mask_eff, buffer, sstats = (
+                comm_straggler.aggregate_and_drain(
+                    comm, global_params, wire, mask, late, wkey, snr_db,
+                    buffer))
     else:
         with stage_span("Uplink"):
             wire, residual, tier_idx = uplink_fn(comm, delta, residual,
@@ -301,18 +366,32 @@ def wire_round(comm: CommConfig, *, delta: PyTree, theta: Array,
             agg_params, mask_eff = aggregate_fn(comm, global_params, wire,
                                                 mask, wkey, snr_db=snr_db)
     with stage_span("Downlink"):
-        bcast, ps_residual = downlink_fn(comm, agg_params, global_params,
-                                         ps_residual,
-                                         jax.random.fold_in(
-                                             qkey, _DOWNLINK_SALT))
+        bcast, ps_res_new = downlink_fn(comm, agg_params, global_params,
+                                        ps_residual,
+                                        jax.random.fold_in(
+                                            qkey, _DOWNLINK_SALT))
+    if straggler_mode:
+        # quorum hold: the PS broadcasts w_t unchanged and its downlink
+        # EF state freezes — otherwise a compressed downlink would still
+        # flush its residual through a zero aggregate
+        held = sstats.held > 0
+        bcast = jax.tree.map(lambda g, b: jnp.where(held, g, b),
+                             global_params, bcast)
+        ps_residual = jax.tree.map(lambda o, n: jnp.where(held, o, n),
+                                   ps_residual, ps_res_new)
+    else:
+        ps_residual = ps_res_new
     rec = comm_budget.round_record(comm, global_params, num_workers, mask,
                                    mask_eff, tier_idx=tier_idx,
                                    snr_db=snr_db)
     if phy is not None:
-        phy = comm_phy.advance_age(phy, mask_eff)
+        phy = comm_phy.advance_age(
+            phy, mask_eff,
+            buffered=(buffer.age if straggler_mode else None))
     return WireOutcome(global_params=bcast, residual=residual,
                        ps_residual=ps_residual, mask_eff=mask_eff,
-                       record=rec, phy=phy)
+                       record=rec, phy=phy, buffer=buffer,
+                       straggler=sstats, transmitted=transmitted)
 
 
 # ---------------------------------------------------------------------------
@@ -403,11 +482,13 @@ class RoundPipeline(NamedTuple):
 
     def wire(self, *, delta: PyTree, theta: Array, mask: Array,
              global_params: PyTree, residual: PyTree, ps_residual: PyTree,
-             qkey: Array, wkey: Array, phy: PhyState = None) -> WireOutcome:
+             qkey: Array, wkey: Array, phy: PhyState = None,
+             buffer: Any = None, round_idx: Array = None) -> WireOutcome:
         return wire_round(self.comm, delta=delta, theta=theta, mask=mask,
                           global_params=global_params, residual=residual,
                           ps_residual=ps_residual, qkey=qkey, wkey=wkey,
                           num_workers=self.num_workers, phy=phy,
+                          buffer=buffer, round_idx=round_idx,
                           axis_name=self.axis_name,
                           uplink_fn=self.uplink_fn,
                           aggregate_fn=self.aggregate_fn,
@@ -417,7 +498,7 @@ class RoundPipeline(NamedTuple):
                   global_loss: Array, outcome: WireOutcome
                   ) -> RoundTelemetry:
         rec = outcome.record
-        return RoundTelemetry(
+        tel = RoundTelemetry(
             losses=losses, theta=theta, mask=mask, global_loss=global_loss,
             selected_count=mask.sum(),
             uploaded_params=selection.uploaded_parameter_count(
@@ -427,6 +508,13 @@ class RoundPipeline(NamedTuple):
             compression_ratio=rec.compression_ratio,
             airtime_s=rec.airtime_s, energy_j=rec.energy_j,
             mean_snr_db=rec.mean_snr_db)
+        if outcome.straggler is not None:
+            s = outcome.straggler
+            tel = tel._replace(late=s.late, drained=s.drained,
+                               buffered=s.buffered, held=s.held)
+        if outcome.transmitted is not None:
+            tel = tel._replace(transmitted=outcome.transmitted)
+        return tel
 
 
 def count_params(params: PyTree) -> int:

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.comm import compress as comm_compress
 from repro.comm import channel as comm_channel
 from repro.comm import phy as comm_phy
+from repro.comm import straggler as comm_straggler
 from repro.comm.budget import CommConfig
 from repro.core import pso, rounds
 from repro.core.pso import PsoHyperParams
@@ -73,6 +74,9 @@ class DistSwarmState(NamedTuple):
     residual: PyTree          # (W, ...) uplink error-feedback state
     ps_residual: PyTree       # PS-side downlink error-feedback state
     phy: comm_phy.PhyState    # (W,) per-worker channel state (comm.phy)
+    # (W, ...) parked late deltas + staleness ages (comm.straggler);
+    # None unless comm.round_deadline_s is set
+    buffer: Any = None
 
 
 def init_state(global_params: PyTree, cfg: DistSwarmConfig,
@@ -95,6 +99,8 @@ def init_state(global_params: PyTree, cfg: DistSwarmConfig,
         residual=stack(comm_compress.init_residual(global_params)),
         ps_residual=rounds.init_ps_residual(global_params),
         phy=comm_phy.init_state(cfg.comm, W),
+        buffer=comm_straggler.init_buffer(
+            cfg.comm, stack(comm_compress.init_residual(global_params))),
     )
 
 
@@ -202,7 +208,8 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
                         global_params=state.global_params,
                         residual=state.residual,
                         ps_residual=state.ps_residual,
-                        qkey=qkey, wkey=wkey, phy=state.phy)
+                        qkey=qkey, wkey=wkey, phy=state.phy,
+                        buffer=state.buffer, round_idx=state.round_idx)
         global_loss = eval_one(out.global_params)
 
         # --- BestTracking (Eqs. 9-10) -------------------------------------
@@ -219,7 +226,7 @@ def build_train_step(loss_fn: Callable[[PyTree, dict], Array],
             gbest_params=gbest_params, gbest_loss=gbest_loss,
             prev_theta_mean=theta_mean, eta=state.eta,
             round_idx=state.round_idx + 1, residual=out.residual,
-            ps_residual=out.ps_residual, phy=out.phy)
+            ps_residual=out.ps_residual, phy=out.phy, buffer=out.buffer)
         return next_state, pipe.telemetry(losses=losses, theta=theta,
                                           mask=mask,
                                           global_loss=global_loss,
@@ -279,13 +286,14 @@ def fedavg_train_step(loss_fn, cfg: DistSwarmConfig):
                         global_params=state.global_params,
                         residual=state.residual,
                         ps_residual=state.ps_residual,
-                        qkey=qkey, wkey=wkey, phy=state.phy)
+                        qkey=qkey, wkey=wkey, phy=state.phy,
+                        buffer=state.buffer, round_idx=state.round_idx)
         global_loss = loss_fn(out.global_params, eval_batch)
         next_state = state._replace(global_params=out.global_params,
                                     round_idx=state.round_idx + 1,
                                     residual=out.residual,
                                     ps_residual=out.ps_residual,
-                                    phy=out.phy)
+                                    phy=out.phy, buffer=out.buffer)
         return next_state, pipe.telemetry(losses=losses, theta=theta,
                                           mask=mask,
                                           global_loss=global_loss,

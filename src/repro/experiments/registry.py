@@ -81,6 +81,14 @@ def describe_scenarios() -> list[tuple[str, str]]:
             wire.append(f"byz={s.comm.byzantine}:{s.comm.aggregator}")
         if s.comm.adaptive_bits:
             wire.append(f"tiers={s.comm.num_tiers}:{s.comm.tier_rank}")
+        if s.comm.round_deadline_s is not None:
+            wire.append(f"ddl={s.comm.round_deadline_s:g}s"
+                        f"/γ={s.comm.staleness_gamma:g}")
+            if s.comm.quorum:
+                wire.append(f"quorum={s.comm.quorum}")
+        if s.comm.fault_prob:
+            wire.append(f"faults={s.comm.fault_prob:g}"
+                        f"x{s.comm.fault_rounds}r")
         rows.append((name, what + (f" [{' '.join(wire)}]" if wire else "")))
     return rows
 
@@ -162,6 +170,21 @@ register_scenario(_comm("energy-budget",
                                    bandwidth_hz=200e3,
                                    pathloss_spread_db=6.0)))
 
+# -- straggler / deadline regimes (comm.straggler: FedBuff-style async) -----
+# Deadlines calibrated against the fig3 C=50 width-8 model: its dense
+# payload is ~113 KiB, i.e. ~0.16 s of airtime at the 20 dB / 1 MHz link
+# budget — so 0.2 s makes the faded/far tail late while near workers
+# stay on time (benchmarks/comm_efficiency.py sweeps this axis).
+register_scenario(_comm("straggler/deadline-tight",
+                        CommConfig(fading="rayleigh", doppler_rho=0.9,
+                                   pathloss_spread_db=6.0,
+                                   round_deadline_s=0.2,
+                                   staleness_gamma=0.5, quorum=10)))
+register_scenario(_comm("straggler/fedbuff",
+                        CommConfig(fading="rayleigh", doppler_rho=0.9,
+                                   round_deadline_s=0.25,
+                                   staleness_gamma=1.0)))
+
 # -- small teaching fleets (the examples) -----------------------------------
 register_scenario(ExperimentSpec(
     name="quickstart",
@@ -203,6 +226,19 @@ register_scenario(dataclasses.replace(
     # exercised: resampled devices re-enter with compressed idle rounds
     comm=CommConfig(channel="awgn", snr_db=10.0, fading="rayleigh",
                     doppler_rho=0.9)))
+
+# -- fault injection: deterministic worker churn (comm.straggler) -----------
+# The fleet-scale robustness run: every round each of the 16 workers
+# starts a 2-round outage with p=0.15, the ~21 ms deadline makes faded
+# workers late (the w=2 payload is ~7.5 KiB: ~11 ms of airtime at the
+# 20 dB budget), and the quorum holds w_t when churn + fades thin the
+# round below 4 deltas. tests/test_straggler.py pins recovery.
+register_scenario(dataclasses.replace(
+    _FLEET, name="faults/churn",
+    comm=CommConfig(fading="rayleigh", doppler_rho=0.9,
+                    pathloss_spread_db=3.0, round_deadline_s=0.02,
+                    staleness_gamma=0.5, quorum=4,
+                    fault_prob=0.15, fault_rounds=2)))
 
 # -- mesh smoke runs (production path, reduced archs) -----------------------
 _MESH_HP = PsoHyperParams(learning_rate=3e-3, velocity_clip=1.0)

@@ -249,11 +249,20 @@ def _wrap_population(prep: Prepared) -> Prepared:
         fresh_workers = WorkerState(
             params=bcast, velocity=jax.tree.map(jnp.zeros_like, bcast),
             best_params=bcast, best_loss=inf, prev_loss=inf)
+        buf = inner.buffer
+        if buf is not None:
+            # a parked late delta belongs to the device that uploaded
+            # it: clear reseated slots so a stranger's stale update
+            # can't drain into the new occupant's rounds
+            buf = buf._replace(
+                delta=mix(jax.tree.map(jnp.zeros_like, buf.delta),
+                          buf.delta),
+                age=jnp.where(changed, 0, buf.age))
         return inner._replace(
             workers=mix(fresh_workers, inner.workers),
             residual=mix(jax.tree.map(jnp.zeros_like, inner.residual),
                          inner.residual),
-            phy=phy)
+            phy=phy, buffer=buf)
 
     @jax.jit
     def scatter(table, idx, inner, theta, round_idx):
@@ -325,8 +334,13 @@ def _run_paper(prep: Prepared, verbose: bool, em=NULL,
                     jax.block_until_ready(metrics)
             with em.span("Eval", round_idx=t):
                 acc = float(test_accuracy(state.global_params))
+        # under fault injection only alive selected workers transmit:
+        # the exact byte/energy accounting keys off that count
+        transmitted = getattr(metrics, "transmitted", None)
         up, down = host_round_bytes(
-            comm, selected=metrics.selected_count,
+            comm,
+            selected=(transmitted if transmitted is not None
+                      else metrics.selected_count),
             bytes_up_jit=metrics.bytes_up,
             payload_up=record["payload_bytes_per_worker"],
             payload_down=record["downlink_bytes_per_worker"],
@@ -343,11 +357,21 @@ def _run_paper(prep: Prepared, verbose: bool, em=NULL,
                "energy_j": float(metrics.energy_j),
                "mean_snr_db": float(metrics.mean_snr_db),
                "round_time_s": round(time.time() - t0, 2)}
+        if transmitted is not None:
+            row["transmitted"] = int(transmitted)
+        for k in ("late", "drained", "buffered", "held"):
+            v = getattr(metrics, k, None)
+            if v is not None:
+                row[k] = int(v)
         if getattr(metrics, "cohort", None) is not None:
             row["cohort"] = np.asarray(metrics.cohort).tolist()
         for k, v in row.items():
             record.setdefault(k, []).append(v)
         em.round(t, row)
+        if row.get("held"):
+            em.log(f"[straggler] round {t}: quorum hold — w_t frozen "
+                   f"(late={row.get('late', 0)} "
+                   f"buffered={row.get('buffered', 0)})")
         if verbose and (t % r.log_every == 0 or t == r.rounds - 1):
             em.log(f"[{a.algorithm}/{d.case}/{d.dataset}] "
                    f"round {t + 1}/{r.rounds} "
@@ -454,8 +478,12 @@ def _run_mesh(prep: Prepared, verbose: bool, em=NULL,
                 if em.active:
                     jax.block_until_ready(info)
         gl = float(info.global_loss)
+        transmitted = getattr(info, "transmitted", None)
         up, down = host_round_bytes(
-            dcfg.comm, selected=info.mask.sum(), bytes_up_jit=info.bytes_up,
+            dcfg.comm,
+            selected=(transmitted if transmitted is not None
+                      else info.mask.sum()),
+            bytes_up_jit=info.bytes_up,
             payload_up=payload, payload_down=down_payload, num_workers=W)
         # one row feeds both artifact history and event stream (see
         # _run_paper) — bit-equal by construction
@@ -468,8 +496,14 @@ def _run_mesh(prep: Prepared, verbose: bool, em=NULL,
                "energy_j": float(info.energy_j),
                "mean_snr_db": float(info.mean_snr_db),
                "step_time_s": round(time.time() - t0, 2)}
+        if transmitted is not None:
+            row["transmitted"] = float(transmitted)
+        for k in ("late", "drained", "buffered", "held"):
+            v = getattr(info, k, None)
+            if v is not None:
+                row[k] = float(v)
         for k, v in row.items():
-            record[k].append(v)
+            record.setdefault(k, []).append(v)
         em.round(i, row)
         if verbose:
             em.log(f"[mesh/{m.name}] step {i + 1}/{r.rounds} "

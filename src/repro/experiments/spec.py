@@ -216,6 +216,12 @@ class ExperimentSpec:
                 f"of the K={K} cohort seats per end (population P={P}), "
                 f"fewer than comm.byzantine={self.comm.byzantine} "
                 f"adversaries — raise trim_ratio or shrink the attack")
+        if self.comm.quorum > K:
+            raise ValueError(
+                f"comm.quorum ({self.comm.quorum}) exceeds the per-round "
+                f"cohort size K = data.num_workers ({K}) (population "
+                f"P={P}) — at most K deltas (fresh + drained) can ever be "
+                f"available, so every round would quorum-hold")
         if d.alpha is not None:
             if d.alpha <= 0.0:
                 raise ValueError(f"data.alpha must be > 0, got {d.alpha}")

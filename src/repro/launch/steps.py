@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.comm.budget import CommConfig
 from repro.comm.phy import PhyState
+from repro.comm.straggler import StragglerBuffer
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import swarm_dist
 from repro.core.swarm_dist import DistSwarmConfig, DistSwarmState
@@ -232,7 +233,13 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         residual=pshard(state_shapes.residual, True),
         ps_residual=pshard(state_shapes.ps_residual, False),
         phy=PhyState(h_re=wvec, h_im=wvec, pathloss_db=wvec, snr_db=wvec,
-                     age=wvec))
+                     age=wvec),
+        # parked late deltas shard like the uplink residual (worker-
+        # stacked model tree); ages are a (W,) vector like phy columns
+        buffer=(StragglerBuffer(
+                    delta=pshard(state_shapes.buffer.delta, True),
+                    age=wvec)
+                if state_shapes.buffer is not None else None))
 
     batch_sh = _shard_batch_specs(specs["batch"], rules, mesh,
                                   worker_axes=worker_axes)
@@ -246,6 +253,11 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                    compression_ratio=scalar,
                                    airtime_s=scalar, energy_j=scalar,
                                    mean_snr_db=scalar)
+    if dcfg.comm.round_deadline_s is not None:
+        info_sh = info_sh._replace(late=scalar, drained=scalar,
+                                   buffered=scalar, held=scalar)
+    if dcfg.comm.fault_prob:
+        info_sh = info_sh._replace(transmitted=scalar)
 
     def wrapped(state, batch, eval_batch, key):
         with use_rules(rules, mesh):

@@ -100,6 +100,10 @@ _COMMON_FLAGS = [
     ("pathloss_spread_db", "comm.pathloss_spread_db"),
     ("outage_snr_db", "comm.outage_snr_db"),
     ("num_tiers", "comm.num_tiers"), ("tier_rank", "comm.tier_rank"),
+    ("round_deadline_s", "comm.round_deadline_s"),
+    ("staleness_gamma", "comm.staleness_gamma"), ("quorum", "comm.quorum"),
+    ("fault_prob", "comm.fault_prob"), ("fault_rounds", "comm.fault_rounds"),
+    ("fault_seed", "comm.fault_seed"),
 ]
 _PAPER_FLAGS = [
     ("case", "data.case"), ("dataset", "data.dataset"),
@@ -240,6 +244,13 @@ def main() -> None:
     ap.add_argument("--outage-snr-db", type=float, default=None)
     ap.add_argument("--num-tiers", type=int, default=None)
     ap.add_argument("--tier-rank", default=None, choices=list(TIER_RANKS))
+    # straggler / deadline engine + fault injection (comm.straggler)
+    ap.add_argument("--round-deadline-s", type=float, default=None)
+    ap.add_argument("--staleness-gamma", type=float, default=None)
+    ap.add_argument("--quorum", type=int, default=None)
+    ap.add_argument("--fault-prob", type=float, default=None)
+    ap.add_argument("--fault-rounds", type=int, default=None)
+    ap.add_argument("--fault-seed", type=int, default=None)
     # mesh mode
     ap.add_argument("--arch", default=None)
     ap.add_argument("--steps", type=int, default=None)

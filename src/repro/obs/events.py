@@ -96,6 +96,16 @@ class RunStart(Event):
 
 @dataclasses.dataclass(frozen=True)
 class RoundEvent(Event):
+    """One communication round's metrics row, bit-equal to the artifact
+    history (experiments/runner.py builds both from the same dict).
+
+    `metrics` is free-form on purpose — engine features surface new
+    keys without an event-schema bump. Stable keys: acc/global_loss,
+    selected/delivered, bytes_up/bytes_down, airtime_s/energy_j,
+    mean_snr_db. The straggler engine (comm.straggler) adds
+    late/drained/buffered/held, fault injection adds transmitted, and
+    the population engine adds the cohort id list — each present only
+    when its feature is on, so stream consumers key off membership."""
     kind: ClassVar[str] = "round"
     round: int = 0                   # 0-based round index
     metrics: dict = dataclasses.field(default_factory=dict)

@@ -39,6 +39,9 @@ def tiny(spec: ExperimentSpec) -> ExperimentSpec:
     # shrink fleet presets with the cohort: P=64 registered, K=4 active
     if spec.fleet.population:
         spec = override(spec, "fleet.population=64", "fleet.cohort_size=4")
+    # clamp quorum with the cohort (validate() rejects quorum > K)
+    if spec.comm.quorum and spec.comm.quorum > spec.data.num_workers:
+        spec = override(spec, f"comm.quorum={spec.data.num_workers}")
     return spec
 
 

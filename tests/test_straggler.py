@@ -1,0 +1,344 @@
+"""comm.straggler — deadline-driven straggler engine invariants: the
+fresh/late partition of a selected cohort, gamma=0 drain telescoping,
+bitwise quorum holds, deterministic fault schedules with exact byte
+accounting, and the buffered-vs-dropped age semantics."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import budget, compress, phy, straggler
+from repro.comm.budget import CommConfig
+from repro.core import mdsl
+from repro.core.mdsl import MdslConfig
+from repro.core.pso import PsoHyperParams
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(key, C, shapes=((4,), (3, 2))):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, (C,) + s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def _global(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape[1:], x.dtype), tree)
+
+
+def _scfg(**kw):
+    kw.setdefault("round_deadline_s", 1.0)
+    return CommConfig(**kw)
+
+
+class TestAdvanceAge:
+    def test_buffered_differs_from_dropped(self):
+        """A late-but-parked upload resets the worker's age to 1 (the PS
+        heard from it, one round ago); a silent worker just ages."""
+        st_ = phy.init_state(CommConfig(), 3)
+        st_ = phy.advance_age(st_, jnp.asarray([1.0, 0.0, 0.0]),
+                              buffered=jnp.asarray([0, 1, 0]))
+        np.testing.assert_array_equal(np.asarray(st_.age), [0, 1, 1])
+        st_ = phy.advance_age(st_, jnp.asarray([0.0, 0.0, 0.0]),
+                              buffered=jnp.asarray([0, 1, 0]))
+        np.testing.assert_array_equal(np.asarray(st_.age), [1, 1, 2])
+
+    def test_legacy_pinned_without_buffered(self):
+        """buffered=None is the exact pre-straggler semantics."""
+        a = phy.init_state(CommConfig(), 3)
+        b = phy.init_state(CommConfig(), 3)
+        for mask in ([1.0, 0.0, 1.0], [0.0, 0.0, 1.0]):
+            m = jnp.asarray(mask)
+            a = phy.advance_age(a, m)
+            b = phy.advance_age(b, m, buffered=None)
+        np.testing.assert_array_equal(np.asarray(a.age), np.asarray(b.age))
+
+    def test_delivery_beats_buffered(self):
+        st_ = phy.init_state(CommConfig(), 2)
+        st_ = phy.advance_age(st_, jnp.asarray([1.0, 1.0]),
+                              buffered=jnp.asarray([1, 1]))
+        np.testing.assert_array_equal(np.asarray(st_.age), [0, 0])
+
+
+class TestLateMask:
+    def test_extreme_deadlines(self):
+        cfg = _scfg(round_deadline_s=1e9)
+        tree = _tree(KEY, 5)
+        mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+        np.testing.assert_array_equal(
+            np.asarray(straggler.late_mask(cfg, tree, mask)), 0.0)
+        tight = _scfg(round_deadline_s=1e-12)
+        np.testing.assert_array_equal(
+            np.asarray(straggler.late_mask(tight, tree, mask)),
+            np.asarray(mask))
+
+    def test_snr_tail_goes_late(self):
+        """Late is physics: the deadline sits between the fast and slow
+        workers' airtimes, so exactly the low-SNR tail misses it."""
+        cfg = _scfg()
+        tree = _tree(KEY, 4)
+        mask = jnp.ones((4,))
+        wb = budget.worker_payload_bytes(cfg, tree, 4)
+        snr = jnp.asarray([20.0, 20.0, -10.0, -10.0])
+        air = np.asarray(budget.worker_airtime_s(cfg, wb, snr))
+        mid = 0.5 * (air[0] + air[2])
+        late = straggler.late_mask(cfg._replace(round_deadline_s=float(mid)),
+                                   tree, mask, snr_db=snr)
+        np.testing.assert_array_equal(np.asarray(late), [0.0, 0.0, 1.0, 1.0])
+
+    def test_unselected_never_late(self):
+        cfg = _scfg(round_deadline_s=1e-12)
+        late = straggler.late_mask(cfg, _tree(KEY, 3), jnp.zeros((3,)))
+        np.testing.assert_array_equal(np.asarray(late), 0.0)
+
+
+class TestAggregateAndDrain:
+    @hp.given(st.integers(2, 8), st.integers(0, 4))
+    @hp.settings(max_examples=8, deadline=None)
+    def test_fresh_and_late_partition_selected(self, C, seed):
+        """On an ideal channel the selected cohort splits exactly into
+        fresh (aggregated now) and late (parked): disjoint, covering."""
+        k = jax.random.PRNGKey(seed)
+        tree = _tree(k, C)
+        g = _global(tree)
+        buf = straggler.init_buffer(_scfg(), tree)
+        mask = jax.random.bernoulli(jax.random.fold_in(k, 1), 0.7,
+                                    (C,)).astype(jnp.float32)
+        late = mask * jax.random.bernoulli(
+            jax.random.fold_in(k, 2), 0.5, (C,)).astype(jnp.float32)
+        _, fresh, newbuf, stats = straggler.aggregate_and_drain(
+            _scfg(), g, tree, mask, late, jax.random.fold_in(k, 3),
+            None, buf)
+        fresh = np.asarray(fresh)
+        late = np.asarray(late)
+        np.testing.assert_array_equal(fresh * late, 0.0)
+        np.testing.assert_array_equal(fresh + late, np.asarray(mask))
+        # every late arrival parked at age 1
+        np.testing.assert_array_equal(np.asarray(newbuf.age),
+                                      late.astype(np.int32))
+        assert float(stats.late) == late.sum()
+
+    @hp.given(st.integers(2, 8), st.integers(0, 4))
+    @hp.settings(max_examples=8, deadline=None)
+    def test_gamma_zero_drain_telescopes(self, C, seed):
+        """gamma=0: a delta buffered one round and then drained lands in
+        the aggregate exactly as if it had arrived on time."""
+        k = jax.random.PRNGKey(seed)
+        tree = _tree(k, C)
+        g = _global(tree)
+        cfg = _scfg(staleness_gamma=0.0)
+        zeros = jax.tree.map(jnp.zeros_like, tree)
+        empty = straggler.init_buffer(cfg, tree)
+        on_time, _, _, _ = straggler.aggregate_and_drain(
+            cfg, g, tree, jnp.ones((C,)), jnp.zeros((C,)),
+            jax.random.fold_in(k, 1), None, empty)
+        parked = straggler.StragglerBuffer(
+            delta=tree, age=jnp.ones((C,), jnp.int32))
+        drained, _, newbuf, stats = straggler.aggregate_and_drain(
+            cfg, g, zeros, jnp.zeros((C,)), jnp.zeros((C,)),
+            jax.random.fold_in(k, 2), None, parked)
+        for a, b in zip(jax.tree.leaves(on_time), jax.tree.leaves(drained)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+        assert float(stats.drained) == C
+        assert float(stats.buffered) == 0  # applied round clears the slots
+
+    def test_quorum_hold_is_bitwise(self):
+        C = 4
+        tree = _tree(KEY, C)
+        g = jax.tree.map(lambda x: jax.random.normal(KEY, x.shape[1:]), tree)
+        cfg = _scfg(quorum=C + 5)
+        buf = straggler.init_buffer(cfg, tree)
+        out, _, newbuf, stats = straggler.aggregate_and_drain(
+            cfg, g, tree, jnp.ones((C,)), jnp.zeros((C,)), KEY, None, buf)
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(out)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert float(stats.held) == 1.0
+        assert float(stats.drained) == 0.0
+        # fresh arrivals on a held round park instead of vanishing
+        np.testing.assert_array_equal(np.asarray(newbuf.age), 1)
+
+    def test_held_round_ages_survivors(self):
+        C = 3
+        tree = _tree(KEY, C)
+        cfg = _scfg(quorum=C + 5)
+        parked = straggler.StragglerBuffer(
+            delta=tree, age=jnp.asarray([2, 1, 0], jnp.int32))
+        _, _, newbuf, stats = straggler.aggregate_and_drain(
+            cfg, _global(tree), jax.tree.map(jnp.zeros_like, tree),
+            jnp.zeros((C,)), jnp.zeros((C,)), KEY, None, parked)
+        np.testing.assert_array_equal(np.asarray(newbuf.age), [3, 2, 0])
+        assert float(stats.held) == 1.0
+
+    def test_staleness_weights_decay(self):
+        cfg = _scfg(staleness_gamma=1.0)
+        w = np.asarray(straggler.staleness_weights(
+            cfg, jnp.asarray([0, 1, 2, 4], jnp.int32)))
+        assert w[0] == 0.0  # empty slot
+        np.testing.assert_allclose(w[1:], [0.5, 1 / 3, 0.2], rtol=1e-6)
+        flat = np.asarray(straggler.staleness_weights(
+            cfg._replace(staleness_gamma=0.0),
+            jnp.asarray([0, 1, 7], jnp.int32)))
+        np.testing.assert_array_equal(flat, [0.0, 1.0, 1.0])
+
+    @pytest.mark.parametrize("agg", ["median", "trimmed_mean"])
+    def test_robust_aggregators_compose(self, agg):
+        C = 6
+        tree = _tree(KEY, C)
+        cfg = _scfg(aggregator=agg, trim_ratio=0.2)
+        buf = straggler.StragglerBuffer(
+            delta=tree, age=jnp.asarray([0, 0, 0, 1, 2, 0], jnp.int32))
+        out, _, _, _ = straggler.aggregate_and_drain(
+            cfg, _global(tree), tree, jnp.ones((C,)), jnp.zeros((C,)),
+            KEY, None, buf)
+        for leaf in jax.tree.leaves(out):
+            assert bool(jnp.isfinite(leaf).all())
+
+
+class TestFaultSchedule:
+    def test_deterministic_and_replayable(self):
+        cfg = CommConfig(fault_prob=0.5, fault_rounds=2, fault_seed=7)
+        for t in range(6):
+            a = np.asarray(straggler.alive_mask(cfg, jnp.int32(t), 16))
+            b = np.asarray(straggler.alive_mask(cfg, jnp.int32(t), 16))
+            np.testing.assert_array_equal(a, b)
+
+    def test_outage_lasts_exactly_r_rounds(self):
+        """down(t) == OR of the crash draws at t-r for r < R, so a crash
+        at round t keeps the worker dark through t+R-1 and not beyond."""
+        C, R = 32, 3
+        cfg = CommConfig(fault_prob=0.3, fault_rounds=R, fault_seed=3)
+        stream = jax.random.fold_in(jax.random.PRNGKey(cfg.fault_seed),
+                                    straggler.FAULT_SALT)
+        crash = {t: np.asarray(jax.random.bernoulli(
+            jax.random.fold_in(stream, t), cfg.fault_prob, (C,)))
+            for t in range(10)}
+        for t in range(10):
+            want = np.zeros((C,), bool)
+            for r in range(R):
+                if t - r >= 0:
+                    want |= crash[t - r]
+            got = np.asarray(straggler.alive_mask(cfg, jnp.int32(t), C))
+            np.testing.assert_array_equal(got, (~want).astype(np.float32))
+
+    def test_no_faults_all_alive(self):
+        cfg = CommConfig()
+        assert not straggler.fault_mode(cfg)
+        np.testing.assert_array_equal(
+            np.asarray(straggler.alive_mask(
+                cfg._replace(fault_prob=0.0), jnp.int32(4), 8)), 1.0)
+
+
+class TestConfigGates:
+    def test_packed_wire_ineligible_under_deadline(self):
+        cfg = CommConfig(compressor="int8")
+        tree = _global(_tree(KEY, 2))
+        assert compress.packed_wire_eligible(cfg, tree)
+        assert not compress.packed_wire_eligible(
+            cfg._replace(round_deadline_s=0.5), tree)
+
+    def test_deadline_needs_rate_model(self):
+        with pytest.raises(ValueError, match="rate model"):
+            CommConfig(round_deadline_s=0.5, bandwidth_hz=None).validate()
+
+    def test_quorum_needs_deadline(self):
+        with pytest.raises(ValueError, match="round_deadline_s"):
+            CommConfig(quorum=3).validate()
+
+    def test_quorum_exceeding_cohort_rejected(self):
+        from repro.experiments.spec import ExperimentSpec, override
+        spec = override(ExperimentSpec(), "data.num_workers=8",
+                        "comm.round_deadline_s=0.5", "comm.quorum=9")
+        with pytest.raises(ValueError, match="quorum"):
+            spec.validate()
+
+    def test_fault_prob_bounds(self):
+        with pytest.raises(ValueError):
+            CommConfig(fault_prob=1.0).validate()
+        with pytest.raises(ValueError):
+            CommConfig(fault_prob=-0.1).validate()
+        CommConfig(fault_prob=0.99, fault_rounds=3).validate()
+
+    def test_buffer_none_when_inactive(self):
+        assert straggler.init_buffer(CommConfig(), _tree(KEY, 4)) is None
+
+
+class TestEngineIntegration:
+    """The tiny logistic fleet from test_comm.py, through mdsl_round."""
+
+    def _run(self, comm, rounds=4, C=6, seed=0, algorithm="mdsl"):
+        din, L = 6, 3
+        key = jax.random.PRNGKey(seed)
+        w_true = jax.random.normal(key, (din, L))
+        xs = jax.random.normal(jax.random.fold_in(key, 1), (C, 64, din))
+        ys = jnp.argmax(jnp.einsum("cnd,dl->cnl", xs, w_true), axis=-1)
+        gx = jax.random.normal(jax.random.fold_in(key, 2), (128, din))
+        gy = jnp.argmax(gx @ w_true, axis=-1)
+
+        def init(k):
+            return {"w": 0.01 * jax.random.normal(k, (din, L)),
+                    "b": jnp.zeros((L,))}
+
+        def loss_fn(p, x, y):
+            logits = x @ p["w"] + p["b"]
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y[..., None], -1).mean()
+
+        cfg = MdslConfig(algorithm=algorithm, local_epochs=2, batch_size=32,
+                         hp=PsoHyperParams(learning_rate=0.3,
+                                           velocity_clip=0.1), comm=comm)
+        state = mdsl.init_state(jax.random.fold_in(key, 3), init, C,
+                                eta=jnp.zeros((C,)), comm=comm)
+        n_params = mdsl.count_params(state.global_params)
+        hist = []
+        for r in range(rounds):
+            state, m = mdsl.mdsl_round(
+                state, xs, ys, gx, gy, jax.random.fold_in(key, 100 + r),
+                loss_fn=loss_fn, eval_fn=loss_fn, cfg=cfg,
+                n_params=n_params)
+            hist.append(m)
+        return state, hist, n_params
+
+    def test_default_config_has_no_straggler_telemetry(self):
+        _, hist, _ = self._run(CommConfig(), rounds=2)
+        for m in hist:
+            assert m.late is None and m.held is None
+            assert m.transmitted is None
+
+    def test_tight_deadline_parks_then_drains(self):
+        comm = CommConfig(round_deadline_s=1e-12, quorum=2,
+                          staleness_gamma=0.5)
+        state, hist, _ = self._run(comm, rounds=3)
+        # round 0: everyone late, nothing available -> quorum hold
+        assert float(hist[0].late) > 0
+        assert float(hist[0].held) == 1.0
+        assert float(hist[0].buffered) > 0
+        # a later round drains the parked deltas
+        assert sum(float(m.drained) for m in hist[1:]) > 0
+        for leaf in jax.tree.leaves(state.global_params):
+            assert bool(jnp.isfinite(leaf).all())
+
+    def test_churn_stays_finite_with_exact_byte_accounting(self):
+        comm = CommConfig(round_deadline_s=1e9, fault_prob=0.4,
+                          fault_rounds=2, fault_seed=5)
+        state, hist, n = self._run(comm, rounds=5)
+        for m in hist:
+            # crashed workers transmit nothing: the wire bytes are the
+            # transmitting-worker count times the dense payload, exactly
+            assert float(m.bytes_up) == pytest.approx(
+                float(m.transmitted) * n * 4)
+            assert float(m.transmitted) <= float(m.selected_count)
+        for leaf in jax.tree.leaves(state.global_params):
+            assert bool(jnp.isfinite(leaf).all())
+
+    def test_churn_recovers_buffer_returns_to_zero(self):
+        comm = CommConfig(round_deadline_s=1e-12, fault_prob=0.3,
+                          fault_rounds=1, fault_seed=2)
+        _, hist, _ = self._run(comm, rounds=6)
+        assert any(float(m.buffered) > 0 for m in hist)
+        assert float(hist[-1].drained) > 0 or float(hist[-1].buffered) == 0
+        # occupancy drains down within a round of parking
+        occ = [float(m.buffered) for m in hist]
+        assert min(occ[1:]) <= max(occ[:-1])
